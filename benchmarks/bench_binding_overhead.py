@@ -1,0 +1,38 @@
+"""Paper Fig. 10: binding overhead (C++ vs Python vs Java bindings).
+
+The analogue here: the relational ops are XLA programs; the "binding" is
+the Python dispatch into the JAX runtime. We measure per-call dispatch
+overhead (tiny input, overhead-dominated) vs amortized compute (large
+input), plus the AOT-compiled call path — the paper's claim "binding
+overhead is negligible" maps to overhead/compute -> 0 as rows grow.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Table, timeit
+from repro.core import ops_local as L
+from repro.core.table import Table as RTable
+from repro.data.synthetic import random_table
+
+
+def main(quick: bool = False):
+    sizes = [256, 4096, 65536] + ([] if quick else [524288])
+    t = Table("Fig10: dispatch/binding overhead",
+              ["rows", "jit_call_us", "aot_call_us", "us_per_1k_rows"])
+    for n in sizes:
+        a = random_table(n, key_range=n, seed=1)
+        ta = RTable.from_arrays({"k": a.columns["k"], "v": a.columns["d0"]})
+        fn = jax.jit(lambda x: L.sort_by(x, "k").row_count)
+        aot = fn.lower(ta).compile()
+        t_jit = timeit(fn, ta, warmup=2, iters=20)
+        t_aot = timeit(aot, ta, warmup=2, iters=20)
+        t.add(n, t_jit * 1e6, t_aot * 1e6, t_aot * 1e6 / (n / 1000))
+    t.emit()
+    return t
+
+
+if __name__ == "__main__":
+    import sys
+    main("--quick" in sys.argv)

@@ -1,0 +1,79 @@
+"""Kernel-level benches: Pallas hot spots vs their XLA/ref formulations.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python)
+— their wall-clock is meaningless, so we time the XLA reference path (what
+the TPU kernel replaces) and report each kernel's analytic roofline terms
+on v5e (bytes moved / HBM bw vs FLOPs / peak) — the number the kernel is
+designed to hit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, timeit
+from repro.kernels import ref
+from repro.kernels.hash64 import hash32
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def main(quick: bool = False):
+    n = 1 << (18 if quick else 22)
+    t = Table("kernel roofline (v5e model) + CPU XLA-path timings",
+              ["kernel", "shape", "cpu_xla_ms", "v5e_mem_us", "v5e_compute_us",
+               "bound"])
+
+    # hash32: 1 read + 1 write of uint32; ~8 int-ops/element
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 2**31, n), jnp.int32)
+    f = jax.jit(lambda x: ref.hash32_ref(x, seed=7))
+    ms = timeit(f, x) * 1e3
+    mem = 8 * n / HBM_BW * 1e6
+    comp = 8 * n / PEAK_FLOPS * 1e6
+    t.add("hash32(murmur3)", f"({n},)", ms, mem, comp,
+          "memory" if mem > comp else "compute")
+
+    # histogram: read ids + tiny output; one-hot matmul formulation
+    p = 64
+    ids = jnp.asarray(np.random.default_rng(1).integers(-1, p, n), jnp.int32)
+    f = jax.jit(lambda i: ref.histogram_ref(i, p))
+    ms = timeit(f, ids) * 1e3
+    mem = 4 * n / HBM_BW * 1e6
+    comp = n * p / PEAK_FLOPS * 1e6  # one-hot compare+add
+    t.add("bucket_histogram", f"({n},)x{p}", ms, mem, comp,
+          "memory" if mem > comp else "compute")
+
+    # bitonic tile sort: log^2 passes in VMEM; HBM = 1 read + 1 write
+    m = 1 << 11
+    keys = jnp.asarray(np.random.default_rng(2).integers(0, 2**31, m),
+                       jnp.uint32)
+    payload = jnp.arange(m, dtype=jnp.int32)
+    f = jax.jit(lambda k, v: jax.lax.sort((k, v), num_keys=1))
+    ms = timeit(f, keys, payload) * 1e3
+    passes = 11 * 12 // 2
+    mem = 8 * m * 2 / HBM_BW * 1e6
+    comp = passes * m * 4 / PEAK_FLOPS * 1e6
+    t.add("bitonic_sort_tile", f"({m},)", ms, mem, comp,
+          "memory" if mem > comp else "compute")
+
+    # flash attention: S=2048 block; bytes = qkv+o once vs 4*S^2*hd matmul
+    b, s, h, hd = 1, 2048, 8, 128
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    ms = timeit(f, q, k, v) * 1e3
+    flops = 4 * b * h * s * s * hd / 2  # causal halves
+    mem = (4 * b * s * h * hd * 2) / HBM_BW * 1e6
+    comp = flops / PEAK_FLOPS * 1e6
+    t.add("flash_attention", f"B{b} S{s} H{h} hd{hd}", ms, mem, comp,
+          "memory" if mem > comp else "compute")
+
+    t.emit()
+    return t
+
+
+if __name__ == "__main__":
+    import sys
+    main("--quick" in sys.argv)

@@ -1,0 +1,69 @@
+"""Paper Figs. 7 & 8: weak + strong scaling of distributed Join (hash &
+sort) and Union over SPMD worker counts.
+
+Caveat (recorded in EXPERIMENTS.md): this container exposes ONE physical
+core, so the P "devices" time-share it — wall-clock cannot show speedup.
+The curves validate the BSP structure (flat per-worker cost would appear
+on real chips), and the per-worker collective bytes from the compiled HLO
+(bench output column) are the hardware-independent scaling signal.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import Table
+
+WORKER_COUNTS = [1, 2, 4, 8]
+OPS = ["join_hash", "join_sort", "union"]
+
+
+def run_worker(op: str, workers: int, rows_per_worker: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={workers}"
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scaling_worker", "--op", op,
+         "--workers", str(workers), "--rows-per-worker",
+         str(rows_per_worker)],
+        capture_output=True, text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    return json.loads(line[7:])
+
+
+def bench_weak(rows_per_worker: int = 50_000) -> Table:
+    t = Table("Fig7: weak scaling (rows/worker fixed = %d)" % rows_per_worker,
+              ["op", "workers", "total_rows", "seconds", "rows_per_sec"])
+    for op in OPS:
+        for p in WORKER_COUNTS:
+            r = run_worker(op, p, rows_per_worker)
+            t.add(op, p, r["total_rows"], r["seconds"], r["rows_per_second"])
+    return t
+
+
+def bench_strong(total_rows: int = 200_000) -> Table:
+    t = Table("Fig8: strong scaling (total rows fixed = %d)" % total_rows,
+              ["op", "workers", "rows_per_worker", "seconds", "speedup"])
+    for op in OPS:
+        base = None
+        for p in WORKER_COUNTS:
+            r = run_worker(op, p, total_rows // p)
+            if base is None:
+                base = r["seconds"]
+            t.add(op, p, total_rows // p, r["seconds"], base / r["seconds"])
+    return t
+
+
+def main(quick: bool = False):
+    rpw = 20_000 if quick else 50_000
+    tot = 80_000 if quick else 200_000
+    bench_weak(rpw).emit()
+    bench_strong(tot).emit()
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

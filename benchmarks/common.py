@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (block_until_ready'd)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def timeit_host(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Table:
+    def __init__(self, title: str, columns: list[str]):
+        self.title = title
+        self.columns = columns
+        self.rows: list[list] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def emit(self):
+        print(f"\n## {self.title}")
+        print(",".join(self.columns))
+        for r in self.rows:
+            print(",".join(
+                f"{v:.4g}" if isinstance(v, float) else str(v) for v in r))

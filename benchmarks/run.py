@@ -1,0 +1,32 @@
+"""Benchmark harness: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Sections:
+  Fig9/TableII engine comparison (bench_vs_baselines)
+  Fig10 binding/dispatch overhead (bench_binding_overhead)
+  kernels roofline (bench_kernels)
+  Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    t0 = time.perf_counter()
+    from benchmarks import (bench_binding_overhead, bench_kernels,
+                            bench_scaling, bench_vs_baselines)
+
+    print(f"# benchmark run (quick={quick})")
+    bench_vs_baselines.main(quick)
+    bench_binding_overhead.main(quick)
+    bench_kernels.main(quick)
+    bench_scaling.main(quick)
+    print(f"\n[done] total {time.perf_counter() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

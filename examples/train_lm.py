@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the relational ETL pipeline feeding the jitted train step (the paper's
+"data engineering everywhere" thesis, end to end).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--devices 8]
+
+Note: on this 1-core CPU container a 113M model runs ~30-60 s/step — use
+--steps 30 for a quick check (loss visibly decreases); "a few hundred
+steps" is the real-hardware configuration.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+
+    from repro.data.pipeline import PipelineConfig, RelationalTokenPipeline
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.common import ModelConfig
+    from repro.models.factory import build_model
+    from repro.train.loop import LoopConfig, run
+    from repro.train.optimizer import OptConfig
+
+    # ~100M params: 12L x 512d x 8H, 32k vocab (llama3-family block)
+    cfg = ModelConfig(arch="lm-100m", family="dense", num_layers=12,
+                      d_model=512, num_heads=8, num_kv_heads=4, d_ff=2048,
+                      vocab_size=32000, head_dim=64, rope_theta=1e4,
+                      remat="none")
+    mesh = make_local_mesh(model=args.model_axis) \
+        if jax.device_count() > 1 else None
+    model = build_model(cfg, mesh)
+    n = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model: {n/1e6:.1f}M params; devices: {jax.device_count()}")
+
+    pipe = RelationalTokenPipeline(PipelineConfig(
+        seq_len=256, global_batch=16, vocab_size=cfg.vocab_size,
+        quality_threshold=0.3, seed=0))
+    ocfg = OptConfig(lr=6e-4, warmup_steps=min(30, args.steps // 3),
+                     total_steps=args.steps,
+                     weight_decay=0.01)
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=100, log_every=20, microbatches=2)
+    state, hist = run(model, pipe, ocfg, lcfg)
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over "
+          f"{args.steps} steps")
+    import math
+    random_loss = math.log(cfg.vocab_size)   # ~10.4: untrained baseline
+    # stability check at any length; learning checks need steps past warmup
+    assert hist[-1]["loss"] < random_loss + 0.5, "training diverged"
+    if args.steps >= 100:
+        assert hist[-1]["loss"] < random_loss - 0.25, (
+            "model should beat the random-init baseline")
+        assert hist[-1]["loss"] < hist[0]["loss"], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Architecture registry: the 10 assigned configs + tiny smoke variants."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = [
+    "internvl2-76b",
+    "llama3-8b",
+    "minicpm3-4b",
+    "granite-3-2b",
+    "stablelm-12b",
+    "zamba2-1.2b",
+    "whisper-base",
+    "qwen2-moe-a2.7b",
+    "dbrx-132b",
+    "xlstm-1.3b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+# grad-accumulation microbatch counts for the train_4k cell (per-arch memory
+# budget on a 16 GB v5e chip; hillclimbed in EXPERIMENTS.md §Perf)
+TRAIN_MICROBATCHES = {
+    "internvl2-76b": 16,
+    "dbrx-132b": 16,
+    "stablelm-12b": 8,
+    "llama3-8b": 8,
+    "minicpm3-4b": 8,
+    "granite-3-2b": 4,
+    "zamba2-1.2b": 4,
+    "qwen2-moe-a2.7b": 4,
+    "xlstm-1.3b": 4,
+    "whisper-base": 1,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_tiny(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).TINY
+
+
+def train_microbatches(arch: str) -> int:
+    return TRAIN_MICROBATCHES.get(arch, 1)

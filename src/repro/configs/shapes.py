@@ -1,0 +1,90 @@
+"""Assigned input shapes × runnability rules + input_specs construction.
+
+Four shapes per architecture (assignment block):
+  train_4k     seq 4096,   global_batch 256  -> train_step
+  prefill_32k  seq 32768,  global_batch 32   -> prefill_step (inference)
+  decode_32k   seq 32768,  global_batch 128  -> serve_step (1 new token,
+                                                KV cache of seq_len)
+  long_500k    seq 524288, global_batch 1    -> serve_step; ONLY for
+               sub-quadratic archs (ssm/hybrid); full-attention archs skip
+               (DESIGN.md §4 skip notes).
+
+``input_specs`` returns ShapeDtypeStructs only (shannon/kernels pattern):
+weak-type-correct, shardable, zero allocation — the dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def runnable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Whether the (arch, shape) cell runs, with the skip reason if not."""
+    cell = SHAPES[shape_name]
+    if cell.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, (
+            f"{cfg.arch} is pure full-attention ({cfg.family}); long_500k "
+            "requires sub-quadratic sequence mixing (assignment skip rule)")
+    return True, ""
+
+
+def runnable_cells(cfg: ModelConfig) -> list[str]:
+    return [n for n in SHAPES if runnable(cfg, n)[0]]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: {'tokens', 'weight'[, 'embeds']}.
+    decode: {'tokens' (B, 1), 'pos' ()} — the cache is built separately
+    (launch/dryrun.py) since it is state, not input.
+    """
+    cell = SHAPES[shape_name]
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        specs = {"weight": _sds((b,), jnp.float32)}
+        if cfg.family == "vlm":
+            nf = cfg.num_frontend_tokens
+            specs["tokens"] = _sds((b, s - nf), jnp.int32)
+            specs["embeds"] = _sds((b, nf, cfg.d_model), jnp.float32)
+        elif cfg.family == "audio":
+            # encoder gets `s` stub frame embeddings, decoder `s` tokens
+            specs["tokens"] = _sds((b, s), jnp.int32)
+            specs["embeds"] = _sds((b, s, cfg.d_model), jnp.float32)
+        else:
+            specs["tokens"] = _sds((b, s), jnp.int32)
+        return specs
+    # decode: one new token against a cache of length s
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def cache_shape(cfg: ModelConfig, shape_name: str) -> tuple[int, int]:
+    """(batch, max_len) for the decode cache of this cell."""
+    cell = SHAPES[shape_name]
+    return cell.global_batch, cell.seq_len

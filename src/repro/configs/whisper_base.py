@@ -1,0 +1,17 @@
+"""whisper-base [audio]: enc-dec, conv frontend STUB [arXiv:2212.04356].
+
+6L encoder + 6L decoder, d_model=512, 8H (kv=8), d_ff=2048, vocab=51865.
+Per the assignment the conv1d frontend is stubbed: input_specs provides
+precomputed frame embeddings (B, S, 512). No long_500k (full attention).
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="whisper-base", family="audio",
+    num_layers=6, encoder_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab_size=51865, head_dim=64,
+    tie_embeddings=True, frontend="audio_stub",
+)
+
+TINY = CONFIG.replace(num_layers=2, encoder_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=512)

@@ -1,0 +1,256 @@
+"""DistContext — the CylonContext analogue (paper §II-C, Fig. 4).
+
+Cylon's ``CylonContext::InitDistributed(mpi_config)`` binds the library to a
+communicator; here the communicator is a **JAX mesh axis**. A
+:class:`DistContext` owns ``(mesh, axis_name)`` and exposes the distributed
+relational operators as jitted ``shard_map`` programs: the BSP worker code in
+``ops_dist.py`` runs once per shard in SPMD lockstep, and the MPI AllToAll
+becomes ``jax.lax.all_to_all`` over ``axis_name``.
+
+A distributed table (:class:`DistTable`) is the global view: every column is
+a device array whose leading dim is ``num_shards * local_capacity`` (sharded
+over the shuffle axis), plus per-shard ``row_counts``. Shard *i* owns rows
+``[i*C, i*C + row_counts[i])`` — Cylon's "each worker holds a partition of
+the table" made explicit in the array layout.
+
+Transport selection (paper §II-D: TCP vs Infiniband) becomes *mesh-axis
+selection*: shuffling over an intra-pod axis rides ICI; an axis that spans
+pods rides DCN. Same operator code, different wire — the paper's
+communication-layer abstraction, preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import ops_dist as D
+from repro.core import ops_local as L
+from repro.core.repartition import ShuffleStats, default_bucket_capacity
+from repro.core.table import Table
+from repro.utils import ceil_div
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DistTable:
+    """Global view of a sharded Table: columns (P*C, ...) + row_counts (P,)."""
+
+    columns: dict[str, jax.Array]
+    row_counts: jax.Array  # (num_shards,) int32
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return ((tuple(self.columns[n] for n in names), self.row_counts), names)
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols, rc = children
+        return cls(dict(zip(names, cols)), rc)
+
+    @property
+    def num_shards(self) -> int:
+        return self.row_counts.shape[0]
+
+    @property
+    def local_capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0] // self.num_shards
+
+    @property
+    def column_names(self) -> list[str]:
+        return sorted(self.columns)
+
+    def global_rows(self) -> jax.Array:
+        return jnp.sum(self.row_counts)
+
+    def to_table(self) -> Table:
+        """Collapse to a single host-side Table (valid rows compacted)."""
+        p, c = self.num_shards, self.local_capacity
+        counts = np.asarray(self.row_counts)
+        cols = {}
+        for k, v in self.columns.items():
+            a = np.asarray(v).reshape((p, c) + tuple(v.shape[1:]))
+            cols[k] = np.concatenate([a[i, : counts[i]] for i in range(p)], axis=0)
+        n = int(counts.sum())
+        return Table.from_arrays(cols, row_count=n)
+
+
+class DistContext:
+    """Binds the relational operators to a mesh axis (the 'communicator').
+
+    Parameters
+    ----------
+    mesh: the device mesh; defaults to a 1-D mesh over all local devices.
+    axis_name: the mesh axis rows shuffle over (must exist in `mesh`).
+    """
+
+    def __init__(self, mesh: Mesh | None = None, axis_name: str = "shuffle"):
+        if mesh is None:
+            mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
+        assert axis_name in mesh.axis_names, (axis_name, mesh.axis_names)
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self._cache: dict = {}
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        return self.mesh.shape[self.axis_name]
+
+    def _sharding(self, ndim: int) -> NamedSharding:
+        spec = P(self.axis_name, *([None] * (ndim - 1)))
+        return NamedSharding(self.mesh, spec)
+
+    # -- table placement ----------------------------------------------------
+    def scatter(self, table: Table, *, local_capacity: int | None = None
+                ) -> DistTable:
+        """Round-robin-block scatter a host Table into `num_shards` shards."""
+        p = self.num_shards
+        n = int(table.row_count)
+        c = local_capacity or max(1, ceil_div(table.capacity, p))
+        counts = np.full((p,), n // p, np.int32)
+        counts[: n % p] += 1
+        assert counts.max() <= c, (counts.max(), c)
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        cols = {}
+        for k in table.column_names:
+            v = np.asarray(table.columns[k])
+            out = np.zeros((p, c) + v.shape[1:], v.dtype)
+            for i in range(p):
+                out[i, : counts[i]] = v[offs[i] : offs[i + 1]]
+            cols[k] = jax.device_put(
+                out.reshape((p * c,) + v.shape[1:]), self._sharding(v.ndim))
+        rc = jax.device_put(jnp.asarray(counts),
+                            NamedSharding(self.mesh, P(self.axis_name)))
+        return DistTable(cols, rc)
+
+    def from_local_parts(self, parts: Sequence[Table]) -> DistTable:
+        """Build a DistTable from one local Table per shard (equal capacity)."""
+        p = self.num_shards
+        assert len(parts) == p, (len(parts), p)
+        caps = {t.capacity for t in parts}
+        assert len(caps) == 1, caps
+        cols = {}
+        for k in parts[0].column_names:
+            v = np.concatenate([np.asarray(t.columns[k]) for t in parts], axis=0)
+            cols[k] = jax.device_put(v, self._sharding(v.ndim))
+        rc = jnp.asarray([int(t.row_count) for t in parts], jnp.int32)
+        rc = jax.device_put(rc, NamedSharding(self.mesh, P(self.axis_name)))
+        return DistTable(cols, rc)
+
+    # -- shard_map plumbing ---------------------------------------------------
+    def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
+        """Execute per-shard `body` over DistTables under shard_map + jit.
+
+        `key` controls the jit cache (None -> no caching, e.g. user lambdas).
+        """
+        from repro.utils import shard_map
+
+        axis = self.axis_name
+
+        def local_fn(*local_tabs):
+            tables = [Table(cols, rc.reshape(())) for cols, rc in local_tabs]
+            out, stats = body(*tables)
+            stats = jax.tree.map(lambda x: jnp.asarray(x)[None], stats)
+            return out.columns, out.row_count[None], stats
+
+        def global_fn(*args):
+            # P(axis) as a pytree-prefix spec: every leaf is per-shard data
+            # sharded on its leading dim (columns, row counts, stats alike).
+            fn = shard_map(local_fn, mesh=self.mesh, in_specs=P(axis),
+                           out_specs=P(axis))
+            return fn(*args)
+
+        args = tuple((t.columns, t.row_counts) for t in tabs)
+        if key is not None:
+            sig = (key, tuple(
+                tuple(sorted((k, v.shape, str(v.dtype))
+                             for k, v in t.columns.items()))
+                for t in tabs))
+            jitted = self._cache.get(sig)
+            if jitted is None:
+                jitted = jax.jit(global_fn)
+                self._cache[sig] = jitted
+            cols, rc, stats = jitted(*args)
+        else:
+            cols, rc, stats = jax.jit(global_fn)(*args)
+        return DistTable(cols, rc), stats
+
+    def _bucket_cap(self, t: DistTable, bucket_capacity: int | None,
+                    slack: float = 2.0) -> int:
+        if bucket_capacity is not None:
+            return bucket_capacity
+        return default_bucket_capacity(t.local_capacity, self.num_shards, slack)
+
+    # -- pleasingly parallel operators (no network; paper §II-B-1/2) ----------
+    def select(self, t: DistTable, predicate: Callable[[dict], jax.Array]
+               ) -> DistTable:
+        out, _ = self._run(None, lambda a: (L.select(a, predicate), ()), [t])
+        return out
+
+    def project(self, t: DistTable, columns: Sequence[str]) -> DistTable:
+        cols = tuple(columns)
+        out, _ = self._run(("project", cols),
+                           lambda a: (L.project(a, cols), ()), [t])
+        return out
+
+    # -- shuffle-based operators (paper §II-B-3..6, Fig. 3) -------------------
+    def join(self, left: DistTable, right: DistTable, on, *, how="inner",
+             algorithm="sort", bucket_capacity=None, out_capacity=None,
+             seed: int = 7):
+        on_t = (on,) if isinstance(on, str) else tuple(on)
+        cb_l = self._bucket_cap(left, bucket_capacity)
+        cb_r = self._bucket_cap(right, bucket_capacity)
+        cb = max(cb_l, cb_r)
+
+        def body(a, b):
+            return D.dist_join(a, b, list(on_t), axis_name=self.axis_name,
+                               bucket_capacity=cb, how=how, algorithm=algorithm,
+                               out_capacity=out_capacity, seed=seed)
+
+        key = ("join", on_t, how, algorithm, cb, out_capacity, seed)
+        return self._run(key, body, [left, right])
+
+    def union(self, a: DistTable, b: DistTable, *, bucket_capacity=None,
+              seed: int = 7):
+        cb = max(self._bucket_cap(a, bucket_capacity),
+                 self._bucket_cap(b, bucket_capacity))
+        body = lambda x, y: D.dist_union(
+            x, y, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
+        return self._run(("union", cb, seed), body, [a, b])
+
+    def intersect(self, a: DistTable, b: DistTable, *, bucket_capacity=None,
+                  seed: int = 7):
+        cb = max(self._bucket_cap(a, bucket_capacity),
+                 self._bucket_cap(b, bucket_capacity))
+        body = lambda x, y: D.dist_intersect(
+            x, y, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
+        return self._run(("intersect", cb, seed), body, [a, b])
+
+    def difference(self, a: DistTable, b: DistTable, *, mode="symmetric",
+                   bucket_capacity=None, seed: int = 7):
+        cb = max(self._bucket_cap(a, bucket_capacity),
+                 self._bucket_cap(b, bucket_capacity))
+        body = lambda x, y: D.dist_difference(
+            x, y, mode=mode, axis_name=self.axis_name, bucket_capacity=cb,
+            seed=seed)
+        return self._run(("difference", mode, cb, seed), body, [a, b])
+
+    def distinct(self, a: DistTable, *, bucket_capacity=None, seed: int = 7):
+        cb = self._bucket_cap(a, bucket_capacity)
+        body = lambda x: D.dist_distinct(
+            x, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
+        return self._run(("distinct", cb, seed), body, [a])
+
+    def sort(self, a: DistTable, by: str, *, bucket_capacity=None,
+             samples_per_shard: int = 64):
+        cb = self._bucket_cap(a, bucket_capacity, slack=4.0)
+        body = lambda x: D.dist_sort(
+            x, by, axis_name=self.axis_name, bucket_capacity=cb,
+            samples_per_shard=samples_per_shard)
+        return self._run(("sort", by, cb, samples_per_shard), body, [a])

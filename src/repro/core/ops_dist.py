@@ -1,0 +1,123 @@
+"""Distributed relational operators (Cylon Fig. 3): local ops ∘ shuffle.
+
+Each function here runs **inside** ``shard_map`` over the shuffle axis —
+the BSP worker program of the paper. ``repro.core.context.DistContext``
+provides the user-facing wrappers that build the shard_map/jit around them.
+
+Composition table (paper §II-B):
+  select/project      : pleasingly parallel, no network
+  join                : hash_partition(key) -> AllToAll -> local join
+  union/intersect/diff: hash_partition(whole row) -> AllToAll -> local op
+  sort (global)       : sample splitters -> range partition -> local sort
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops_local as L
+from repro.core.repartition import ShuffleStats, repartition
+from repro.core.table import Table
+from repro.kernels import ops as kops
+
+
+def _row_pid(table: Table, key_columns: Sequence[str], p: int, seed: int):
+    pid, _ = L.hash_partition(table, key_columns, p, seed=seed)
+    return pid
+
+
+def dist_join(
+    left: Table,
+    right: Table,
+    on: Sequence[str] | str,
+    *,
+    axis_name: str,
+    bucket_capacity: int,
+    how: str = "inner",
+    algorithm: str = "sort",
+    out_capacity: int | None = None,
+    seed: int = 7,
+):
+    """Distributed join = shuffle both sides by key hash, then local join.
+
+    Rows with equal keys land on the same shard (same hash, same modulus),
+    so the local join of the repartitioned tables is exact.
+    """
+    on_l = [on] if isinstance(on, str) else list(on)
+    p = jax.lax.axis_size(axis_name)
+    left2, st_l = repartition(
+        left, _row_pid(left, on_l, p, seed), axis_name=axis_name,
+        bucket_capacity=bucket_capacity)
+    right2, st_r = repartition(
+        right, _row_pid(right, on_l, p, seed), axis_name=axis_name,
+        bucket_capacity=bucket_capacity)
+    out = L.join(left2, right2, on_l, how=how, algorithm=algorithm,
+                 out_capacity=out_capacity, seed=seed + 1)
+    return out, (st_l, st_r)
+
+
+def _dist_set_op(a: Table, b: Table, op, *, axis_name: str, bucket_capacity: int,
+                 seed: int = 7, **kw):
+    """Shuffle by whole-row hash (paper §II-B-4) so duplicates colocate."""
+    names = a.column_names
+    p = jax.lax.axis_size(axis_name)
+    a2, st_a = repartition(a, _row_pid(a, names, p, seed), axis_name=axis_name,
+                           bucket_capacity=bucket_capacity)
+    b2, st_b = repartition(b, _row_pid(b, names, p, seed), axis_name=axis_name,
+                           bucket_capacity=bucket_capacity)
+    return op(a2, b2, **kw), (st_a, st_b)
+
+
+def dist_union(a: Table, b: Table, **kw):
+    return _dist_set_op(a, b, L.union, **kw)
+
+
+def dist_intersect(a: Table, b: Table, **kw):
+    return _dist_set_op(a, b, L.intersect, **kw)
+
+
+def dist_difference(a: Table, b: Table, *, mode: str = "symmetric", **kw):
+    return _dist_set_op(a, b, lambda x, y: L.difference(x, y, mode=mode), **kw)
+
+
+def dist_distinct(a: Table, *, axis_name: str, bucket_capacity: int, seed: int = 7):
+    p = jax.lax.axis_size(axis_name)
+    a2, st = repartition(a, _row_pid(a, a.column_names, p, seed),
+                         axis_name=axis_name, bucket_capacity=bucket_capacity)
+    return L.distinct(a2), (st,)
+
+
+def dist_sort(
+    table: Table,
+    by: str,
+    *,
+    axis_name: str,
+    bucket_capacity: int,
+    samples_per_shard: int = 64,
+):
+    """Global sort: sampled range partition, then local sort per shard.
+
+    Output ordering: shard i holds keys <= shard i+1's keys; each shard is
+    locally sorted — the standard distributed sort contract.
+    """
+    p = jax.lax.axis_size(axis_name)
+    key = table.columns[by]
+    valid = table.valid_mask()
+    sentinel = kops.key_max(key.dtype)
+    # stride-sample this shard's keys (sentinel where invalid)
+    c = table.capacity
+    stride = max(1, c // samples_per_shard)
+    samp = jnp.where(valid, key, sentinel)[::stride][:samples_per_shard]
+    all_samp = jax.lax.all_gather(samp, axis_name).reshape(-1)
+    all_samp = jnp.sort(all_samp)
+    # p-1 splitters at even quantiles of the sample
+    n_s = all_samp.shape[0]
+    qs = (jnp.arange(1, p) * n_s) // p
+    splitters = all_samp[qs]
+    pid = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    pid = jnp.where(valid, pid, -1)
+    out, st = repartition(table, pid, axis_name=axis_name,
+                          bucket_capacity=bucket_capacity)
+    return L.sort_by(out, by), (st,)

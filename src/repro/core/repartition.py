@@ -1,0 +1,108 @@
+"""The network operator: hash-partition + AllToAll shuffle (Cylon §II-B/C, Fig. 3).
+
+This is the paper's single network primitive ("Initially we have implemented
+the All to All network operator which is widely required when implementing
+the distributed counterparts of the local operators"). Every distributed
+relational operator — and, in this framework, MoE expert dispatch — is
+``local prep -> repartition -> local op``.
+
+MPI ``AllToAllv`` (variable counts) has no dense-collective equivalent on a
+TPU mesh, so we adapt: each shard packs rows into ``num_partitions`` equal
+``bucket_capacity`` send slots (grouped with a stable sort — dense, vectorized)
+and runs ``jax.lax.all_to_all`` once for all columns. Skew beyond
+``bucket_capacity`` is *counted and surfaced* (``overflow``) rather than
+silently dropped being undetectable — the production recourse is re-running
+with a bigger capacity, mirroring Cylon's memory-budget failure mode.
+
+Runs inside ``shard_map`` (BSP lockstep = SPMD).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import Table
+from repro.core.ops_local import compact
+from repro.kernels import ops as kops
+
+
+class ShuffleStats(NamedTuple):
+    overflow: jax.Array  # int32 scalar: rows dropped on THIS shard's sends
+    received: jax.Array  # int32 scalar: valid rows received
+
+
+def pack_by_partition(part_id: jax.Array, num_partitions: int,
+                      bucket_capacity: int):
+    """Group rows into equal-capacity per-partition send slots.
+
+    part_id: (n,) int32 destination in [0, num_partitions); -1 = skip.
+    Returns (send_idx (num_partitions, bucket_capacity) int32 with -1 for
+    empty slots, hist (num_partitions,) int32 true per-partition counts).
+
+    This is the shared dense-packing primitive behind BOTH the relational
+    shuffle (`repartition`) and MoE expert dispatch (`models/moe.py`) —
+    the paper's AllToAll network operator reused for token routing
+    (DESIGN.md §2, level-2).
+    """
+    (n,) = part_id.shape
+    pid_sort = jnp.where(part_id >= 0, part_id, num_partitions)
+    order = jnp.argsort(pid_sort, stable=True)
+    hist = kops.bucket_histogram(part_id, num_partitions)
+    off = jnp.cumsum(hist) - hist
+    j = jnp.arange(bucket_capacity)[None, :]
+    src = jnp.clip(off[:, None] + j, 0, n - 1)
+    ok = j < hist[:, None]
+    return jnp.where(ok, order[src], -1), hist
+
+
+def repartition(
+    table: Table,
+    part_id: jax.Array,
+    *,
+    axis_name: str,
+    bucket_capacity: int,
+) -> tuple[Table, ShuffleStats]:
+    """Send each valid row to the shard named by ``part_id`` (int32, -1=invalid).
+
+    Returns the received table (capacity = num_shards * bucket_capacity,
+    valid rows front-compacted) and shuffle stats.
+    """
+    p = jax.lax.axis_size(axis_name)
+    c = table.capacity
+    cb = bucket_capacity
+    valid = table.valid_mask()
+
+    # group rows by destination: stable sort on (pid, original order)
+    send_idx, hist = pack_by_partition(
+        jnp.where(valid, part_id, -1), p, cb)  # (p, cb)
+
+    recv_cols = {}
+    for name, col in table.columns.items():
+        buf = col[jnp.clip(send_idx, 0, c - 1)]  # (p, cb, *rest)
+        sel = send_idx.reshape(send_idx.shape + (1,) * (col.ndim - 1)) >= 0
+        buf = jnp.where(sel, buf, jnp.zeros_like(buf))
+        recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        recv_cols[name] = recv.reshape((p * cb,) + col.shape[1:])
+
+    sent = jnp.minimum(hist, cb)
+    recv_counts = jax.lax.all_to_all(
+        sent.reshape(p, 1), axis_name, split_axis=0, concat_axis=0, tiled=True
+    ).reshape(p)
+
+    recv_valid = (jnp.arange(cb)[None, :] < recv_counts[:, None]).reshape(p * cb)
+    out = compact(Table(recv_cols, jnp.asarray(p * cb, jnp.int32)), recv_valid)
+    stats = ShuffleStats(
+        overflow=jnp.sum(jnp.maximum(hist - cb, 0)).astype(jnp.int32),
+        received=jnp.sum(recv_counts).astype(jnp.int32),
+    )
+    return out, stats
+
+
+def default_bucket_capacity(capacity: int, num_shards: int, slack: float = 2.0) -> int:
+    """Per-destination slot budget: even split x slack for skew."""
+    from repro.utils import ceil_div
+
+    return max(1, ceil_div(int(capacity * slack), num_shards))

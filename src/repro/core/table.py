@@ -1,0 +1,144 @@
+"""Columnar Table abstraction — the JAX/TPU analogue of Cylon's Arrow table.
+
+A Table is a struct-of-arrays: every column is a ``jax.Array`` whose leading
+dimension is the same static length (the *capacity*), plus a traced scalar
+``row_count``. Rows ``[0, row_count)`` are valid and **compacted to the
+front**; rows ``[row_count, capacity)`` are garbage. This is the
+static-shape adaptation of Arrow's variable-length record batches
+(DESIGN.md §2): it makes every relational operator a pure, jittable,
+shardable function.
+
+Columns may be N-D (e.g. a ``tokens`` column of shape ``(capacity, seq)``):
+a row is then a record of vectors. Sort keys and hash inputs must be 1-D;
+payload columns can be anything. This is how token batches and MoE
+dispatch ride the same relational machinery (DESIGN.md §2 level-2).
+
+Zero-copy interop (the paper's Fig. 5/6 story): a Table's columns ARE device
+arrays — feeding them into a training step is a pytree hand-off, no copy, no
+host round-trip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KEY_DTYPES = (jnp.int32, jnp.uint32, jnp.float32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Table:
+    """Fixed-capacity columnar table. Columns share length == capacity."""
+
+    columns: dict[str, jax.Array]
+    row_count: jax.Array  # int32 scalar (traced)
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return ((tuple(self.columns[n] for n in names), self.row_count), names)
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols, row_count = children
+        return cls(dict(zip(names, cols)), row_count)
+
+    # -- constructors ---------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, columns: dict[str, jax.Array], row_count=None,
+                    capacity: int | None = None) -> "Table":
+        """Build from arrays sharing their leading length (host or device)."""
+        cols = {k: jnp.asarray(v) for k, v in columns.items()}
+        lens = {v.shape[0] for v in cols.values()}
+        assert len(lens) == 1, f"ragged columns: { {k: v.shape for k, v in cols.items()} }"
+        n = lens.pop()
+        if capacity is not None and capacity != n:
+            assert capacity > n, (capacity, n)
+            cols = {
+                k: jnp.zeros((capacity,) + v.shape[1:], v.dtype).at[:n].set(v)
+                for k, v in cols.items()
+            }
+        rc = jnp.asarray(n if row_count is None else row_count, jnp.int32)
+        return cls(cols, rc)
+
+    @classmethod
+    def empty(cls, schema: dict[str, jnp.dtype], capacity: int) -> "Table":
+        cols = {k: jnp.zeros((capacity,), dt) for k, dt in schema.items()}
+        return cls(cols, jnp.asarray(0, jnp.int32))
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self) -> list[str]:
+        return sorted(self.columns)
+
+    @property
+    def schema(self) -> dict[str, jnp.dtype]:
+        return {k: v.dtype for k, v in sorted(self.columns.items())}
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity) < self.row_count
+
+    def __repr__(self) -> str:  # concrete only outside jit
+        return f"Table(cols={self.column_names}, capacity={self.capacity})"
+
+    # -- host-side materialization (the "to_pandas/to_numpy" edge) ------------
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        """Trim to valid rows on the host. Blocks; not for use inside jit."""
+        n = int(self.row_count)
+        return {k: np.asarray(v[:n]) for k, v in sorted(self.columns.items())}
+
+    def to_rows(self) -> list[tuple]:
+        d = self.to_numpy()
+        names = sorted(d)
+        return list(zip(*(d[n] for n in names))) if names else []
+
+    # -- functional helpers ----------------------------------------------------
+    def with_columns(self, columns: dict[str, jax.Array]) -> "Table":
+        return Table({**self.columns, **columns}, self.row_count)
+
+    def rename(self, mapping: dict[str, str]) -> "Table":
+        return Table({mapping.get(k, k): v for k, v in self.columns.items()},
+                     self.row_count)
+
+    def gather(self, idx: jax.Array, row_count, fill_invalid: bool = True) -> "Table":
+        """Reorder rows by `idx` (len == new capacity). idx == -1 -> fill 0."""
+        def g(col):
+            out = col[jnp.clip(idx, 0, self.capacity - 1)]
+            if fill_invalid:
+                sel = idx.reshape(idx.shape + (1,) * (col.ndim - 1)) >= 0
+                out = jnp.where(sel, out, jnp.zeros_like(out))
+            return out
+        return Table({k: g(v) for k, v in self.columns.items()},
+                     jnp.asarray(row_count, jnp.int32))
+
+
+def concat_tables(a: Table, b: Table) -> Table:
+    """Concatenate (capacity = sum of capacities), keeping valid rows front.
+
+    Rows of `b` are shifted to start at a.row_count via a gather, preserving
+    the compacted-front invariant without a sort.
+    """
+    assert a.schema == b.schema, (a.schema, b.schema)
+    ca, cb = a.capacity, b.capacity
+    n = ca + cb
+    pos = jnp.arange(n)
+    from_a = pos < a.row_count
+    ib = pos - a.row_count
+    valid_b = (ib >= 0) & (ib < b.row_count)
+    cols = {}
+    for k in a.columns:
+        va = a.columns[k][jnp.clip(pos, 0, ca - 1)]
+        vb = b.columns[k][jnp.clip(ib, 0, cb - 1)]
+        ex = (1,) * (va.ndim - 1)
+        cols[k] = jnp.where(from_a.reshape((-1,) + ex), va,
+                            jnp.where(valid_b.reshape((-1,) + ex), vb,
+                                      jnp.zeros_like(vb)))
+    return Table(cols, (a.row_count + b.row_count).astype(jnp.int32))

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    lm_labels_table,
+    lm_samples_table,
+    random_table,
+    zipf_table,
+)
+from repro.data.pipeline import RelationalTokenPipeline, Prefetcher  # noqa: F401

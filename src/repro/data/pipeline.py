@@ -1,0 +1,141 @@
+"""Relational ETL -> token batches: the paper's Fig. 5/6 integration story.
+
+The paper's claim is that data engineering should be a *library function*
+inside the training program. Here the pre-processing pipeline for LM
+training is literally the relational operator chain
+
+    samples = lm_samples_table(...)              # 'CSV read'
+    good    = select(samples, quality > θ)       # Select   (paper §II-B-1)
+    joined  = join(good, labels, on=sample_id)   # Join     (paper §II-B-3)
+    batch   = project(head(joined, B), tokens)   # Project  (paper §II-B-2)
+
+executed as one jitted XLA program whose output columns ARE the train-step
+inputs (zero-copy hand-off, the Arrow story). The pipeline is a pure
+function of ``(seed, step)`` — restart/replay determinism for fault
+tolerance — and the :class:`Prefetcher` overlaps batch assembly with the
+step (bounded-staleness straggler mitigation, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops_local as L
+from repro.core.table import Table
+from repro.data import synthetic
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    quality_threshold: float = 0.2
+    oversample: float = 1.6     # raw rows generated per emitted row
+    max_refills: int = 8        # deterministic refill rounds before padding
+    seed: int = 0
+
+
+class RelationalTokenPipeline:
+    """Deterministic relational ETL producing fixed-shape token batches."""
+
+    def __init__(self, config: PipelineConfig):
+        self.config = config
+        c = config
+        self._raw_rows = max(4, int(np.ceil(c.global_batch * c.oversample)))
+        self._etl = jax.jit(partial(
+            _etl_step, threshold=c.quality_threshold, batch=c.global_batch))
+
+    # -- shapes (dry-run / sharding contract) --------------------------------
+    def batch_specs(self) -> dict[str, jax.ShapeDtypeStruct]:
+        c = self.config
+        return {
+            "tokens": jax.ShapeDtypeStruct((c.global_batch, c.seq_len), jnp.int32),
+            "weight": jax.ShapeDtypeStruct((c.global_batch,), jnp.float32),
+        }
+
+    # -- batch assembly -------------------------------------------------------
+    def _round(self, step: int, refill: int):
+        c = self.config
+        samples = synthetic.lm_samples_table(
+            self._raw_rows, c.seq_len, c.vocab_size,
+            seed=c.seed, step=step, shard=refill)
+        labels = synthetic.lm_labels_table(
+            np.asarray(samples.columns["sample_id"]),
+            seed=c.seed, step=step, shard=refill)
+        return samples, labels
+
+    def global_batch(self, step: int) -> dict[str, np.ndarray]:
+        """Assemble batch `step`. Pure in (seed, step); refills deterministic."""
+        c = self.config
+        need = c.global_batch
+        toks = np.zeros((need, c.seq_len), np.int32)
+        wts = np.zeros((need,), np.float32)
+        got = 0
+        for refill in range(c.max_refills):
+            samples, labels = self._round(step, refill)
+            tokens, weight, n = self._etl(samples, labels)
+            n = int(n)
+            take = min(n, need - got)
+            toks[got : got + take] = np.asarray(tokens[:take])
+            wts[got : got + take] = np.asarray(weight[:take])
+            got += take
+            if got >= need:
+                break
+        if got < need:  # pathological filter rate: wrap-pad deterministically
+            reps = -(-need // max(got, 1))
+            toks[got:] = np.tile(toks[:got], (reps, 1))[: need - got]
+            wts[got:] = np.tile(wts[:got], reps)[: need - got]
+        return {"tokens": toks, "weight": wts}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.global_batch(step)
+            step += 1
+
+
+def _etl_step(samples: Table, labels: Table, *, threshold: float, batch: int):
+    """The jitted relational chain (select -> join -> project -> head)."""
+    good = L.select(samples, lambda cols: cols["quality"] > threshold)
+    joined = L.join(good, labels, on="sample_id", how="inner", algorithm="hash",
+                    out_capacity=good.capacity)
+    out = L.head(L.project(joined, ["tokens", "weight"]), batch)
+    return out.columns["tokens"], out.columns["weight"], out.row_count
+
+
+class Prefetcher:
+    """Background-thread prefetch with bounded depth (host-side overlap).
+
+    Decouples batch assembly from the device step: a slow ETL round (the
+    'straggler') is absorbed by the queue instead of stalling the BSP step.
+    """
+
+    def __init__(self, it, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = iter(it)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,75 @@
+"""Synthetic table generators — the paper's CSV workload, deterministic.
+
+The paper's experiments generate CSV files of ``1 int64 index + 3 doubles``
+per row. The TPU adaptation uses ``int32`` keys (the hash kernels are 32-bit;
+DESIGN.md hardware-adaptation table) and ``float32`` payloads. Every
+generator is a pure function of ``(seed, step, shard)`` so a restarted job
+regenerates byte-identical data — the determinism contract the fault-
+tolerance layer relies on (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.table import Table
+
+
+def _rng(seed: int, step: int = 0, shard: int = 0) -> np.random.Generator:
+    # SeedSequence spawning gives independent streams per (seed, step, shard).
+    return np.random.default_rng(np.random.SeedSequence([seed, step, shard]))
+
+
+def random_table(rows: int, *, num_payload: int = 3, key_range: int | None = None,
+                 seed: int = 0, step: int = 0, shard: int = 0,
+                 key_name: str = "k") -> Table:
+    """The paper's benchmark relation: one int key + `num_payload` floats."""
+    rng = _rng(seed, step, shard)
+    key_range = key_range or max(1, rows)
+    cols = {key_name: rng.integers(0, key_range, rows).astype(np.int32)}
+    for i in range(num_payload):
+        cols[f"d{i}"] = rng.standard_normal(rows).astype(np.float32)
+    return Table.from_arrays(cols)
+
+
+def zipf_table(rows: int, *, a: float = 1.5, num_payload: int = 3,
+               key_range: int | None = None, seed: int = 0, step: int = 0,
+               shard: int = 0, key_name: str = "k") -> Table:
+    """Skewed keys (Zipf) — stresses shuffle bucket overflow handling."""
+    rng = _rng(seed, step, shard)
+    key_range = key_range or max(1, rows)
+    k = (rng.zipf(a, rows) - 1) % key_range
+    cols = {key_name: k.astype(np.int32)}
+    for i in range(num_payload):
+        cols[f"d{i}"] = rng.standard_normal(rows).astype(np.float32)
+    return Table.from_arrays(cols)
+
+
+def lm_samples_table(rows: int, seq_len: int, vocab_size: int, *, seed: int = 0,
+                     step: int = 0, shard: int = 0) -> Table:
+    """LM pre-training 'documents': tokens as a 2-D column + metadata.
+
+    Columns: sample_id (int32), tokens (rows, seq_len) int32,
+    quality (f32 in [0,1]) — the filter column, source (int32 bucket).
+    """
+    rng = _rng(seed, step, shard)
+    base = (step * 1_000_003 + shard * 7_001) % (2**31 - rows)
+    return Table.from_arrays({
+        "sample_id": (base + np.arange(rows)).astype(np.int32),
+        "tokens": rng.integers(1, vocab_size, (rows, seq_len)).astype(np.int32),
+        "quality": rng.random(rows).astype(np.float32),
+        "source": rng.integers(0, 8, rows).astype(np.int32),
+    })
+
+
+def lm_labels_table(sample_ids: np.ndarray, *, seed: int = 0, step: int = 0,
+                    shard: int = 0, drop_fraction: float = 0.1) -> Table:
+    """Per-sample weights keyed by sample_id; a fraction is missing, so the
+    inner join in the pipeline also acts as a filter (the paper's ETL join).
+    """
+    rng = _rng(seed ^ 0x5EED, step, shard)
+    keep = rng.random(len(sample_ids)) >= drop_fraction
+    ids = np.asarray(sample_ids)[keep]
+    return Table.from_arrays({
+        "sample_id": ids.astype(np.int32),
+        "weight": (0.5 + rng.random(len(ids)).astype(np.float32)[: len(ids)]),
+    })

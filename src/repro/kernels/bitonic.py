@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: in-VMEM bitonic (key, payload) sort tile.
+
+Cylon's sort-join local operator is bound by the leaf sort. A pointer-based
+quicksort/mergesort does not vectorize on the TPU VPU; the TPU-idiomatic
+equivalent is a bitonic comparator network: every compare-exchange pass is a
+dense reshape + min/max/where over the whole tile, which maps onto 8x128
+vector registers with no data-dependent control flow.
+
+The kernel sorts one tile of TILE (power-of-two) elements entirely in VMEM:
+log2(T)*(log2(T)+1)/2 passes, each reading/writing VREGs only — HBM traffic
+is one tile read + one tile write total. Larger arrays use the kernel as the
+leaf sort (see ops.sort_pairs): XLA's global sort handles the cross-tile
+merge; the VMEM-resident leaf is the paper's "cache-efficient local operator"
+re-expressed for the HBM->VMEM->VREG hierarchy.
+
+Direction math: at stage k = 2^m, distance j = 2^p (p < m), element index
+i = b*2j + s*j + t (s in {0,1}, t < j). Bit m of i equals bit (m-p-1) of b,
+so the ascending flag per pair-block is ((b >> (m-p-1)) & 1) == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import interpret_mode, next_pow2
+
+# 2**11 keys + payload = 2 * 8 KiB * 2 arrays (in+out) ... comfortably < VMEM.
+# Kept modest because interpret-mode (CPU CI) executes every pass in Python.
+DEFAULT_TILE = 1 << 11
+
+
+def _compare_exchange(keys, vals, m: int, p: int):
+    """One bitonic pass at stage 2^m, distance 2^p over flat pow2 arrays."""
+    n = keys.shape[0]
+    j = 1 << p
+    kb = keys.reshape(n // (2 * j), 2, j)
+    vb = vals.reshape(n // (2 * j), 2, j)
+    b = jax.lax.broadcasted_iota(jnp.int32, (n // (2 * j), 1), 0)
+    asc = ((b >> (m - p - 1)) & 1) == 0
+    lo_k, hi_k = kb[:, 0, :], kb[:, 1, :]
+    lo_v, hi_v = vb[:, 0, :], vb[:, 1, :]
+    # lexicographic (key, payload) comparator: payload tie-break makes the
+    # network a stable sort whenever payloads are distinct (callers pass iota).
+    le = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_v <= hi_v))
+    keep = le == asc  # True -> keep (lo, hi) order
+    nlo_k = jnp.where(keep, lo_k, hi_k)
+    nhi_k = jnp.where(keep, hi_k, lo_k)
+    nlo_v = jnp.where(keep, lo_v, hi_v)
+    nhi_v = jnp.where(keep, hi_v, lo_v)
+    keys = jnp.stack([nlo_k, nhi_k], axis=1).reshape(n)
+    vals = jnp.stack([nlo_v, nhi_v], axis=1).reshape(n)
+    return keys, vals
+
+
+def _bitonic_kernel(k_ref, v_ref, ko_ref, vo_ref, *, tile: int):
+    keys = k_ref[...].reshape(tile)
+    vals = v_ref[...].reshape(tile)
+    log_t = tile.bit_length() - 1
+    # Full static unroll: log_t*(log_t+1)/2 compare-exchange passes.
+    for m in range(1, log_t + 1):
+        for p in reversed(range(m)):
+            keys, vals = _compare_exchange(keys, vals, m, p)
+    ko_ref[...] = keys.reshape(k_ref.shape)
+    vo_ref[...] = vals.reshape(v_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def bitonic_sort_tiles(
+    keys: jax.Array,
+    payload: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool | None = None,
+):
+    """Sort each contiguous tile of (keys, payload) ascending by key.
+
+    keys: (N,) uint32/int32/float32, N a multiple of `tile` (pow2, >=256).
+    Returns per-tile-sorted (keys, payload). Full-array sorts pad with the
+    dtype max so the tail tile sorts its sentinels to the end (ops.py).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    (n,) = keys.shape
+    assert n % tile == 0 and tile == next_pow2(tile) and tile >= 256, (n, tile)
+    lanes = 128
+    rows = tile // lanes
+    kp = keys.reshape(n // lanes, lanes)
+    vp = payload.reshape(n // lanes, lanes)
+    grid = (n // tile,)
+    ko, vo = pl.pallas_call(
+        functools.partial(_bitonic_kernel, tile=tile),
+        out_shape=(
+            jax.ShapeDtypeStruct(kp.shape, keys.dtype),
+            jax.ShapeDtypeStruct(vp.shape, payload.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(kp, vp)
+    return ko.reshape(n), vo.reshape(n)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: causal GQA flash attention (the training hot spot).
+
+The (B, H, S, S) score matrix never touches HBM: the grid walks
+(batch, q-head, q-block, k-block) with the k-block dimension innermost;
+running (max, sumexp, weighted-V accumulator) live in VMEM scratch across
+the k sweep (online softmax). Block shapes are MXU-aligned ((bq, hd) x
+(hd, bk) matmuls with hd, bq, bk multiples of 128 on TPU).
+
+GQA rides the index_map: q head h reads kv head ``h // group``, so no
+k/v replication in HBM. Causality skips fully-masked k-blocks via
+``pl.when`` (upper-triangular blocks cost zero compute) and masks the
+diagonal block elementwise.
+
+VMEM budget per grid step (bq=bk=512, hd=128, bf16 in / fp32 scratch):
+q 128K + k 128K + v 128K + acc 256K + (m,l) 4K + out 128K < 1 MiB — far
+under the ~16 MiB/core limit, leaving room for double-buffered pipelines.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import interpret_mode
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, bq: int, bk: int, nk: int, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: k-block strictly above the diagonal contributes nothing
+    run = jnp.bool_(True) if not causal else (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool | None = None
+                    ) -> jax.Array:
+    """q (B, S, H, hd); k, v (B, S, KV, hd); H % KV == 0. Returns (B,S,H,hd).
+
+    S must be a multiple of max(bq, bk) (wrapper-level padding is the
+    caller's job; model seq lens here are powers of two).
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    # layout: (B, H, S, hd) blocks of (1, 1, bq, hd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                               nk=nk, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        scratch_shapes=[
+            _vmem((bq, hd), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

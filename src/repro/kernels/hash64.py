@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: murmur3-fmix32 column hash (Cylon's hash-partition hot spot).
+
+The paper's hash-partition / hash-join local operators are bound by per-row
+hashing + bucketing throughput on the CPU. On TPU the same hot spot is a
+pure-VPU elementwise pipeline; the kernel tiles the column through VMEM in
+(8, 128)-aligned blocks so HBM traffic is exactly one read + one write per
+element (arithmetic intensity is tiny — this op is memory-bound by design,
+see benchmarks/bench_kernels.py).
+
+Layout: a column of N rows is padded to a multiple of ``BLOCK_ROWS * 128``
+and viewed as (N/128, 128); the grid walks row-blocks of BLOCK_ROWS.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import interpret_mode, round_up
+
+LANES = 128
+BLOCK_ROWS = 64  # (64, 128) uint32 tile = 32 KiB in / 32 KiB out of VMEM
+
+def _hash_kernel(x_ref, o_ref, *, seed: int):
+    x = x_ref[...]
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        x = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    h = x.astype(jnp.uint32) ^ jnp.uint32(seed)
+    # murmur3 fmix32 avalanche — wraps naturally in uint32.
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    o_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "interpret"))
+def hash32(x: jax.Array, seed: int = 0, *, interpret: bool | None = None) -> jax.Array:
+    """Hash a 1-D column to uint32 with the Pallas kernel.
+
+    Accepts int32/uint32/float32 (floats hashed by bit pattern). Output
+    matches :func:`repro.kernels.ref.hash32_ref` exactly.
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    (n,) = x.shape
+    tile = BLOCK_ROWS * LANES
+    n_pad = max(round_up(n, tile), tile)
+    xp = jnp.zeros((n_pad,), x.dtype).at[:n].set(x).reshape(n_pad // LANES, LANES)
+    grid = (n_pad // tile,)
+    out = pl.pallas_call(
+        functools.partial(_hash_kernel, seed=seed),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.uint32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=interpret,
+    )(xp)
+    return out.reshape(n_pad)[:n]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: bucket histogram for hash-partition (one-hot reduction).
+
+Cylon's hash-partition needs per-destination row counts before building send
+buffers. Scatter-add (the CPU/GPU idiom) is serialized on TPU; the native
+formulation is a one-hot compare + reduction, which the compiler maps onto
+dense vector ops (and onto the MXU via one_hot @ ones when P is large).
+
+Grid walks row-blocks; each step accumulates its block's counts into the
+single (1, P) output block (revisited across the grid — Pallas keeps it
+resident in VMEM, so HBM sees one read of ids and one write of P counts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils import interpret_mode, round_up
+
+LANES = 128
+BLOCK_ROWS = 32  # (32, 128) ids per grid step
+
+
+def _hist_kernel(ids_ref, o_ref, *, num_buckets: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...].reshape(-1)  # (BLOCK_ROWS*LANES,)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, num_buckets), 1)
+    # one-hot (rows, P) summed over rows -> (1, P); invalid ids (< 0, e.g.
+    # padding) match no bucket.
+    onehot = (ids[:, None] == buckets).astype(jnp.int32)
+    o_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def bucket_histogram(
+    ids: jax.Array, num_buckets: int, *, interpret: bool | None = None
+) -> jax.Array:
+    """Count occurrences of each bucket id in [0, num_buckets).
+
+    ids: (N,) int32; entries outside the range (padding uses -1) are ignored.
+    Returns (num_buckets,) int32. Matches ref.histogram_ref exactly.
+    """
+    if interpret is None:
+        interpret = interpret_mode()
+    (n,) = ids.shape
+    tile = BLOCK_ROWS * LANES
+    n_pad = max(round_up(n, tile), tile)
+    idp = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(ids.astype(jnp.int32))
+    idp = idp.reshape(n_pad // LANES, LANES)
+    grid = (n_pad // tile,)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, num_buckets=num_buckets),
+        out_shape=jax.ShapeDtypeStruct((1, num_buckets), jnp.int32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, num_buckets), lambda i: (0, 0)),
+        interpret=interpret,
+    )(idp)
+    return out.reshape(num_buckets)

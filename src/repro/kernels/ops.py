@@ -1,0 +1,74 @@
+"""Public jit'd wrappers around the Pallas kernels (with composition helpers).
+
+The core library calls these — never the kernels directly — so the
+kernel/fallback choice, padding and multi-column combination live in one
+place. Off-TPU everything runs with interpret=True (bit-exact semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitonic import DEFAULT_TILE, bitonic_sort_tiles
+from repro.kernels.hash64 import hash32
+from repro.kernels.histogram import bucket_histogram
+from repro.utils import next_pow2
+
+__all__ = [
+    "hash32",
+    "hash_columns",
+    "bucket_histogram",
+    "sort_pairs",
+    "key_max",
+]
+
+
+def hash_columns(columns: list[jax.Array], seed: int = 0) -> jax.Array:
+    """Row-wise uint32 hash over one or more columns (order-sensitive).
+
+    This is the paper's multi-column record hash used by hash-partition,
+    hash-join, union/intersect/difference (which hash the whole row).
+    """
+    assert columns, "hash_columns needs at least one column"
+    h = hash32(columns[0], seed=seed)
+    for c in columns[1:]:
+        h = ref.hash_combine_ref(h, hash32(c, seed=seed))
+    return h
+
+
+def key_max(dtype) -> jax.Array:
+    """Sentinel that sorts after every real key of `dtype`."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "use_kernel"))
+def sort_pairs(
+    keys: jax.Array,
+    payload: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    use_kernel: bool | None = None,
+):
+    """Full ascending (keys, payload) sort.
+
+    Strategy (see kernels/bitonic.py): the Pallas bitonic tile is the
+    VMEM-resident leaf sort; arrays larger than one tile fall back to XLA's
+    global sort (whose TPU lowering is itself a vectorized merge network).
+    `use_kernel=False` forces the XLA path — benchmarks compare the two.
+    """
+    if use_kernel is None:
+        use_kernel = True
+    (n,) = keys.shape
+    if not use_kernel or n > tile:
+        return jax.lax.sort((keys, payload), num_keys=1)
+    n_pad = max(next_pow2(n), 256)
+    kp = jnp.full((n_pad,), key_max(keys.dtype), keys.dtype).at[:n].set(keys)
+    vp = jnp.zeros((n_pad,), payload.dtype).at[:n].set(payload)
+    ko, vo = bitonic_sort_tiles(kp, vp, tile=n_pad)
+    return ko[:n], vo[:n]

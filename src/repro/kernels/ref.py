@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contract: tests sweep shapes/dtypes and assert
+``assert_allclose(kernel(x), ref(x))`` (exact for the integer kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# murmur3 fmix32 column hash
+# ---------------------------------------------------------------------------
+
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def fmix32(h: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer (the avalanche step Cylon's hash kernel uses)."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * _M1
+    h = h ^ (h >> 13)
+    h = h * _M2
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash32_ref(x: jax.Array, seed: int = 0) -> jax.Array:
+    """Hash a column of int32/uint32/float32 to uint32.
+
+    Floats are hashed by bit pattern (so -0.0 != 0.0; callers canonicalize).
+    """
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        x = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    x = x.astype(jnp.uint32)
+    return fmix32(x ^ jnp.uint32(seed))
+
+
+def hash_combine_ref(h1: jax.Array, h2: jax.Array) -> jax.Array:
+    """boost::hash_combine — order-sensitive multi-column hash accumulator."""
+    h1 = h1.astype(jnp.uint32)
+    h2 = h2.astype(jnp.uint32)
+    return h1 ^ (h2 + _GOLDEN + (h1 << 6) + (h1 >> 2))
+
+
+# ---------------------------------------------------------------------------
+# bitonic key+payload sort
+# ---------------------------------------------------------------------------
+
+
+def sort_pairs_ref(keys: jax.Array, payload: jax.Array):
+    """Ascending sort of (keys, payload) by keys. Oracle: jax.lax.sort."""
+    return jax.lax.sort((keys, payload), num_keys=1)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Materialized-softmax GQA attention oracle. q (B,S,H,hd); k/v (B,T,KV,hd)."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# bucket histogram
+# ---------------------------------------------------------------------------
+
+
+def histogram_ref(ids: jax.Array, num_buckets: int) -> jax.Array:
+    """Count of ids per bucket; ids outside [0, num_buckets) are ignored."""
+    valid = (ids >= 0) & (ids < num_buckets)
+    return jnp.sum(
+        jnp.where(valid[:, None], ids[:, None] == jnp.arange(num_buckets)[None, :], False),
+        axis=0,
+        dtype=jnp.int32,
+    )

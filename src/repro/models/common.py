@@ -1,0 +1,241 @@
+"""ModelConfig + sharding-rule helpers shared by the whole model zoo.
+
+One dataclass covers all 10 assigned architectures (dense GQA, MLA, MoE,
+Mamba2-hybrid, xLSTM, enc-dec audio, VLM backbone); the family-specific
+fields are zero/empty when unused. Parameter partition specs are produced
+*with* the parameters (same tree structure) so the launcher can jit with
+explicit in_shardings — Megatron-style TP over ``model``, optional
+FSDP over ``data``, batch over ``("pod","data")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Mesh axis names used throughout (launch/mesh.py builds the meshes).
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+# batch / dp sharding axes, in (multi-pod, single-pod) order of preference
+DP_AXES = (POD_AXIS, DATA_AXIS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                     # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # --- MoE -----------------------------------------------------------------
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_num_shared: int = 0
+    moe_d_ff: int = 0               # per-expert ffn width
+    moe_capacity_factor: float = 1.25
+
+    # --- MLA (minicpm3) --------------------------------------------------------
+    attn_kind: str = "gqa"          # gqa | mla
+    mla_q_lora: int = 0
+    mla_kv_lora: int = 0
+    mla_rope_dim: int = 0           # per-head rope dims
+    mla_nope_dim: int = 0           # per-head nope dims
+    mla_v_dim: int = 0              # per-head value dims
+
+    # --- SSM / hybrid (zamba2) / xLSTM ----------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_heads: int = 0              # mamba2 value heads (0 -> d_inner/64)
+    ssm_chunk: int = 256            # SSD chunk length
+    attn_every: int = 0             # zamba2: shared attn block period
+    slstm_every: int = 0            # xlstm: sLSTM block period (rest mLSTM)
+
+    # --- enc-dec (whisper) ------------------------------------------------------
+    encoder_layers: int = 0
+
+    # --- modality frontend (stub per assignment) -------------------------------
+    frontend: str = "none"          # none | vision_stub | audio_stub
+    num_frontend_tokens: int = 0    # vis/audio tokens prepended (vlm)
+
+    # --- numerics ---------------------------------------------------------------
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16       # activation/compute dtype
+    # compute params are bf16; the fp32 master copy lives in the optimizer
+    # state (mixed-precision, ZeRO-sharded — train/optimizer.py)
+    param_dtype: Any = jnp.bfloat16
+
+    # --- compile/perf knobs (hillclimbed in §Perf) -------------------------------
+    scan_layers: bool = True        # scan over stacked layer params
+    remat: str = "full"             # none | full | dots
+    fsdp: bool = False              # shard params over data axis too
+    # 'tp': Megatron TP over MODEL_AXIS (baseline).
+    # 'fsdp': no TP — batch shards over (data, model); weights ZeRO-3
+    #   sharded over both axes, all-gathered per layer. Wins when the model
+    #   is small enough that TP activations dominate collective bytes
+    #   (EXPERIMENTS.md §Perf, llama3-8b train hillclimb).
+    layout: str = "tp"
+    ep_shuffle: bool = True         # MoE dispatch via shard_map all_to_all
+    decode_seq_shard: bool = True   # flash-decoding: KV cache sharded over seq
+    mla_seq_shard: bool = False     # MLA latent cache sharded over seq too
+    time_unroll: bool = False       # unroll inner time-chunk loops (roofline)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Megatron-style vocab padding so the embedding/unembedding tables
+        TP-shard over any mesh axis (e.g. minicpm3's 73448 -> 73472). The
+        logical vocab stays `vocab_size`; pad rows are never routed to."""
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def d_inner(self) -> int:       # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or max(1, self.d_inner // 64)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def axis_if_divisible(dim: int, axis: str, mesh_axis_size: int) -> str | None:
+    """TP an axis only when the dimension divides evenly (e.g. kv_heads=8
+    cannot shard over model=16 -> replicate)."""
+    return axis if dim % max(mesh_axis_size, 1) == 0 and dim >= mesh_axis_size \
+        else None
+
+
+class ShardingRules:
+    """Turns logical dims into PartitionSpecs for a given mesh shape.
+
+    Megatron pairing: 'col' weights shard their output dim over MODEL_AXIS,
+    'row' weights shard their input dim, so each block pays exactly one
+    all-reduce forward and one backward. FSDP (when enabled) shards the
+    complementary dim over DATA_AXIS (gather-on-use, reduce-scatter grads).
+    """
+
+    def __init__(self, mesh_shape: dict[str, int], fsdp: bool,
+                 layout: str = "tp"):
+        self.model = mesh_shape.get(MODEL_AXIS, 1)
+        self.data = mesh_shape.get(DATA_AXIS, 1)
+        self.pod = mesh_shape.get(POD_AXIS, 1)
+        self.has_pod = POD_AXIS in mesh_shape
+        self.fsdp = fsdp
+        self.layout = layout
+        if layout == "fsdp":
+            # the model axis becomes a second batch/ZeRO axis
+            self.fsdp = True
+
+    def decode_layout(self, batch: int, seq_shard: bool = True):
+        """(batch_axes | None, seq_axes | None) for decode caches — see
+        layers.decode_layout (same rule, mesh-free)."""
+        dp = self.batch_axes()
+        dp_size = self.pod * self.data
+        if batch % dp_size == 0 and batch >= dp_size:
+            return dp, ((MODEL_AXIS,) if seq_shard and self.model > 1
+                        else None)
+        axes = ((POD_AXIS,) if self.has_pod else ()) + (DATA_AXIS, MODEL_AXIS)
+        return None, (axes if seq_shard else None)
+
+    def _fs(self, dim: int) -> str | None:
+        return DATA_AXIS if self.fsdp and dim % self.data == 0 \
+            and dim >= self.data else None
+
+    def _mp(self, dim: int) -> str | None:
+        # in the fsdp layout the model axis shards *storage*, not math:
+        # the weight is gathered on use (ZeRO-3), so it still lands on a
+        # "shardable" dim — reuse the same divisibility rule
+        return MODEL_AXIS if dim % self.model == 0 and dim >= self.model else None
+
+    def col(self, in_dim: int, out_dim: int) -> P:
+        """(in, out) weight, output TP-sharded."""
+        return P(self._fs(in_dim), self._mp(out_dim))
+
+    def row(self, in_dim: int, out_dim: int) -> P:
+        """(in, out) weight, input TP-sharded."""
+        return P(self._mp(in_dim), self._fs(out_dim))
+
+    def vec(self, dim: int = 0) -> P:
+        """1-D param (norm scale, bias): replicated (tiny)."""
+        return P(None)
+
+    def embed(self, vocab: int, d: int) -> P:
+        """Embedding table: vocab TP-sharded (masked-lookup + all-reduce).
+
+        fsdp layout: vocab over MODEL for storage, d replicated — the
+        unembedding all-gathers the table (64 MB) instead of all-reducing
+        batch-sharded logits (1 GB)."""
+        if self.layout == "fsdp":
+            return P(self._mp(vocab), None)
+        return P(self._mp(vocab), self._fs(d))
+
+    def expert_col(self, e: int, in_dim: int, out_dim: int) -> P:
+        """(E, in, out) expert weight: experts over MODEL (EP)."""
+        return P(self._mp(e), self._fs(in_dim), None)
+
+    def expert_row(self, e: int, in_dim: int, out_dim: int) -> P:
+        return P(self._mp(e), None, self._fs(out_dim))
+
+    def batch_axes(self):
+        if self.layout == "fsdp":
+            return (POD_AXIS, DATA_AXIS, MODEL_AXIS) if self.has_pod \
+                else (DATA_AXIS, MODEL_AXIS)
+        return (POD_AXIS, DATA_AXIS) if self.has_pod else (DATA_AXIS,)
+
+    def act(self, *rest) -> P:
+        """Activation spec: batch over dp axes, then given axes."""
+        return P(self.batch_axes(), *rest)
+
+
+def stack_layer_specs(spec_tree, num_layers: int):
+    """Prepend a None (layer) dim to every PartitionSpec in a layer tree."""
+    return jax.tree.map(
+        lambda s: P(None, *s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_extend(specs, shapes, data_size: int):
+    """ZeRO sharding for optimizer state: additionally shard the first free,
+    divisible dim of every param over DATA_AXIS. Applied to the fp32
+    master/m/v copies (and the gradient accumulator) regardless of whether
+    the bf16 compute params themselves are FSDP-sharded."""
+    def one(spec, shape):
+        parts = list(spec) + [None] * (len(shape.shape) - len(spec))
+        if any(p == DATA_AXIS or (isinstance(p, tuple) and DATA_AXIS in p)
+               for p in parts):
+            return spec
+        for i, (p, d) in enumerate(zip(parts, shape.shape)):
+            if p is None and d % data_size == 0 and d >= data_size:
+                parts[i] = DATA_AXIS
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

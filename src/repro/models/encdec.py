@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, S_enc, d) — the conv1d stack is
+not modeled. Encoder: bidirectional self-attention blocks with sinusoidal
+positions. Decoder: causal self-attention + cross-attention + GELU MLP,
+learned positions, tied unembedding.
+
+Serving: ``prefill`` runs the encoder once and materializes per-layer
+cross-attention K/V caches; ``decode`` steps update only the self cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as NN
+from repro.models.common import ModelConfig, ShardingRules, stack_layer_specs
+
+AUX0 = {"moe_aux": jnp.float32(0), "moe_dropped": jnp.float32(0)}
+
+
+def _sinusoid(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def init_enc_block(key, cfg: ModelConfig, rules: ShardingRules):
+    ks = jax.random.split(key, 2)
+    attn_p, attn_s = NN.init_attention(ks[0], cfg, rules)
+    mlp_p, mlp_s = NN.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg, rules,
+                               kind="gelu")
+    p = {"ln1": NN.init_norm(cfg.d_model, cfg.param_dtype), "attn": attn_p,
+         "ln2": NN.init_norm(cfg.d_model, cfg.param_dtype), "mlp": mlp_p}
+    s = {"ln1": rules.vec(), "attn": attn_s, "ln2": rules.vec(), "mlp": mlp_s}
+    return p, s
+
+
+def init_dec_block(key, cfg: ModelConfig, rules: ShardingRules):
+    ks = jax.random.split(key, 3)
+    self_p, self_s = NN.init_attention(ks[0], cfg, rules)
+    cross_p, cross_s = NN.init_attention(ks[1], cfg, rules)
+    mlp_p, mlp_s = NN.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg, rules,
+                               kind="gelu")
+    p = {"ln1": NN.init_norm(cfg.d_model, cfg.param_dtype), "self": self_p,
+         "ln2": NN.init_norm(cfg.d_model, cfg.param_dtype), "cross": cross_p,
+         "ln3": NN.init_norm(cfg.d_model, cfg.param_dtype), "mlp": mlp_p}
+    s = {"ln1": rules.vec(), "self": self_s, "ln2": rules.vec(),
+         "cross": cross_s, "ln3": rules.vec(), "mlp": mlp_s}
+    return p, s
+
+
+def init_encdec(key, cfg: ModelConfig, rules: ShardingRules, max_dec_pos: int):
+    ks = jax.random.split(key, 5)
+    embed_p, embed_s = NN.init_embed(ks[0], cfg, rules)
+    ekeys = jax.random.split(ks[1], cfg.encoder_layers)
+    ep = jax.vmap(lambda k: init_enc_block(k, cfg, rules)[0])(ekeys)
+    _, es = init_enc_block(ks[1], cfg, rules)
+    dkeys = jax.random.split(ks[2], cfg.num_layers)
+    dp = jax.vmap(lambda k: init_dec_block(k, cfg, rules)[0])(dkeys)
+    _, ds = init_dec_block(ks[2], cfg, rules)
+    params = {
+        "embed": embed_p,
+        "dec_pos": NN._dense(ks[3], (max_dec_pos, cfg.d_model),
+                             cfg.param_dtype, scale=0.02),
+        "enc_layers": ep, "dec_layers": dp,
+        "enc_norm": NN.init_norm(cfg.d_model, cfg.param_dtype),
+        "dec_norm": NN.init_norm(cfg.d_model, cfg.param_dtype),
+    }
+    specs = {
+        "embed": embed_s, "dec_pos": P(None, None),
+        "enc_layers": stack_layer_specs(es, cfg.encoder_layers),
+        "dec_layers": stack_layer_specs(ds, cfg.num_layers),
+        "enc_norm": rules.vec(), "dec_norm": rules.vec(),
+    }
+    return params, specs
+
+
+def encode(params, cfg: ModelConfig, embeds: jax.Array, mesh=None):
+    """embeds (B, S_enc, d) frame embeddings (frontend stub output)."""
+    x = embeds.astype(cfg.dtype) + _sinusoid(
+        embeds.shape[1], cfg.d_model).astype(cfg.dtype)[None]
+
+    def body(carry, pl):
+        h = NN.layer_norm(carry, pl["ln1"], None, cfg.norm_eps)
+        a, _ = NN.attention_fwd(pl["attn"], h, cfg, mode="bidir", mesh=mesh)
+        x = carry + a
+        h = NN.layer_norm(x, pl["ln2"], None, cfg.norm_eps)
+        return x + NN.mlp_fwd(pl["mlp"], h), None
+
+    from repro.models.transformer import _remat
+    body = _remat(body, cfg)
+    if not cfg.scan_layers:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda v: v[i], params["enc_layers"]))
+    else:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return NN.layer_norm(x, params["enc_norm"], None, cfg.norm_eps)
+
+
+def _dec_block(pl, x, cfg: ModelConfig, *, mode, self_cache, cross_kv, pos, mesh=None):
+    h = NN.layer_norm(x, pl["ln1"], None, cfg.norm_eps)
+    a, n_self = NN.attention_fwd(
+        pl["self"], h, cfg, mode=mode, cache=self_cache, pos=pos, mesh=mesh)
+    x = x + a
+    h = NN.layer_norm(x, pl["ln2"], None, cfg.norm_eps)
+    c, _ = NN.attention_fwd(pl["cross"], h, cfg, mode="cross_decode",
+                            cache=cross_kv, mesh=mesh)
+    x = x + c
+    h = NN.layer_norm(x, pl["ln3"], None, cfg.norm_eps)
+    return x + NN.mlp_fwd(pl["mlp"], h), n_self
+
+
+def build_cross_caches(params, cfg: ModelConfig, enc_out: jax.Array):
+    """Per-decoder-layer cross K/V from the encoder output (stacked L)."""
+    def body(_, pl):
+        dt = enc_out.dtype
+        kv = cfg.num_kv_heads
+        k = jnp.einsum("bsd,dh->bsh", enc_out, pl["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dh->bsh", enc_out, pl["cross"]["wv"].astype(dt))
+        b, s = enc_out.shape[:2]
+        return None, {"k": k.reshape(b, s, kv, cfg.hd),
+                      "v": v.reshape(b, s, kv, cfg.hd)}
+
+    if not cfg.scan_layers:
+        outs = [body(None, jax.tree.map(lambda v: v[i], params["dec_layers"]))[1]
+                for i in range(cfg.num_layers)]
+        return jax.tree.map(lambda *v: jnp.stack(v, 0), *outs)
+    _, kv = jax.lax.scan(body, None, params["dec_layers"])
+    return kv
+
+
+def decode_forward(params, cfg: ModelConfig, tokens: jax.Array, *, mode,
+                   cross_caches, self_caches=None, pos=None, mesh=None):
+    """Decoder pass. mode 'causal' (teacher forcing) or 'decode' (1 token)."""
+    b, s = tokens.shape
+    x = NN.embed_fwd(params["embed"], tokens, cfg)
+    start = pos if mode == "decode" else 0
+    pidx = jnp.arange(s) + (start if start is not None else 0)
+    x = x + params["dec_pos"].astype(cfg.dtype)[pidx][None]
+
+    def body(carry, xs):
+        pl, cc, sc = xs
+        y, n_self = _dec_block(pl, carry, cfg, mode=mode, self_cache=sc,
+                               cross_kv=cc, pos=pos, mesh=mesh)
+        return y, n_self
+
+    from repro.models.transformer import _remat
+    body = _remat(body, cfg)
+    if not cfg.scan_layers:
+        at = lambda t, i: jax.tree.map(lambda v: v[i], t)
+        news = []
+        for i in range(cfg.num_layers):
+            sc = at(self_caches, i) if self_caches is not None else None
+            x, ns = body(x, (at(params["dec_layers"], i),
+                             at(cross_caches, i), sc))
+            news.append(ns)
+        new_self = None
+        if self_caches is not None:
+            new_self = jax.tree.map(lambda *v: jnp.stack(v, 0), *news)
+    elif self_caches is None:
+        x, _ = jax.lax.scan(
+            lambda c, xs: body(c, (xs[0], xs[1], None)), x,
+            (params["dec_layers"], cross_caches))
+        new_self = None
+    else:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cross_caches, self_caches))
+    x = NN.layer_norm(x, params["dec_norm"], None, cfg.norm_eps)
+    logits = NN.unembed_fwd(params["embed"], x, cfg)  # tied
+    return logits, new_self
+
+
+def encdec_forward(params, cfg: ModelConfig, rules, mesh, *, tokens,
+                   embeds, mode="causal", cache=None, pos=None):
+    """Unified entry. Train: embeds (B,S_enc,d) + tokens (B,S_dec).
+
+    Decode: cache = {'self': stacked self KV, 'cross': stacked cross KV,
+    'enc_done': ()} — encoder is NOT re-run (cross caches already built).
+    """
+    if mode == "decode":
+        logits, new_self = decode_forward(
+            params, cfg, tokens, mode="decode", cross_caches=cache["cross"],
+            self_caches=cache["self"], pos=pos, mesh=mesh)
+        return logits, {"self": new_self, "cross": cache["cross"]}, dict(AUX0)
+    enc = encode(params, cfg, embeds, mesh=mesh)
+    cross = build_cross_caches(params, cfg, enc)
+    if cache is not None:  # prefill: write self/cross caches
+        logits, new_self = decode_forward(
+            params, cfg, tokens, mode="causal", cross_caches=cross,
+            self_caches=cache["self"], pos=None, mesh=mesh)
+        return logits, {"self": new_self, "cross": cross}, dict(AUX0)
+    logits, _ = decode_forward(params, cfg, tokens, mode="causal",
+                               cross_caches=cross, self_caches=None,
+                               pos=None, mesh=mesh)
+    return logits, None, dict(AUX0)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int):
+    one = NN.init_attn_cache(cfg, batch, max_len)
+    self_c = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape), one)
+    cross_one = NN.init_attn_cache(cfg, batch, enc_len)
+    cross = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape),
+        cross_one)
+    return {"self": self_c, "cross": cross}
+
+
+def encdec_cache_specs(cfg: ModelConfig, rules: ShardingRules, batch: int):
+    one = NN.attn_cache_specs(cfg, rules, batch)
+    lift = lambda t: jax.tree.map(lambda sp: P(None, *sp), t,
+                                  is_leaf=lambda v: isinstance(v, P))
+    return {"self": lift(one), "cross": lift(one)}

@@ -1,0 +1,141 @@
+"""Model factory: one uniform interface over all architecture families.
+
+``build_model(cfg, mesh)`` returns a :class:`Model` whose members are pure
+functions suitable for jit/pjit:
+
+* ``init(key) -> params``; ``param_specs`` has the same tree structure
+  (feed both to ``jax.jit(..., in_shardings=...)``).
+* ``loss_fn(params, batch) -> (loss, metrics)`` — next-token CE, weighted
+  by the pipeline's per-sample weight (the relational ETL hand-off).
+* ``decode_step(params, cache, tokens, pos) -> (logits, cache)`` and
+  ``init_cache/cache_specs`` for serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import encdec as ED
+from repro.models import transformer as TF
+from repro.models import xlstm as XL
+from repro.models import zamba as ZB
+from repro.models.common import ModelConfig, ShardingRules
+
+MAX_DEC_POS = 32768  # whisper learned-position table size
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    rules: ShardingRules
+    mesh: Any
+    init: Callable
+    param_specs: Any
+    forward: Callable           # (params, *, tokens, embeds, mode, cache, pos)
+    init_cache: Callable        # (params-free) (batch, max_len, enc_len)
+    cache_specs: Callable     # (batch) -> spec tree
+
+    # ---- training loss -----------------------------------------------------
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        embeds = batch.get("embeds")
+        logits, _, aux = self.forward(params, tokens=tokens, embeds=embeds,
+                                      mode="causal", cache=None, pos=None)
+        n_front = 0
+        if cfg.family == "vlm" and embeds is not None:
+            n_front = embeds.shape[1]
+            logits = logits[:, n_front:]
+        # next-token prediction over the text tokens
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.models.common import MODEL_AXIS
+            b_ax = self.rules.batch_axes()
+            m = self.mesh.shape.get(MODEL_AXIS, 1)
+            v_ax = MODEL_AXIS if (logits.shape[-1] % m == 0 and
+                                  self.rules.layout != "fsdp") else None
+            from repro.utils import safe_constrain
+            logits = safe_constrain(logits, self.mesh, P(b_ax, None, v_ax))
+        lg = logits[:, :-1].astype(jnp.float32)
+        labels = tokens[:, 1:]
+        mask = (labels != 0).astype(jnp.float32)
+        if "weight" in batch:
+            mask = mask * batch["weight"][:, None].astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        # one-hot contraction instead of take_along_axis: elementwise on the
+        # vocab-sharded dim + reduce (psum) — never gathers the logits
+        onehot = jax.nn.one_hot(labels, lg.shape[-1], dtype=lg.dtype)
+        ll = jnp.sum(lg * onehot, axis=-1)
+        tok_loss = (lse - ll) * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(tok_loss) / denom
+        if cfg.moe_num_experts:
+            loss = loss + 0.01 * aux["moe_aux"] / cfg.num_layers
+        metrics = {"loss": loss, "tokens": jnp.sum(mask), **aux}
+        return loss, metrics
+
+    # ---- serving -----------------------------------------------------------
+    def decode_step(self, params, cache, tokens, pos):
+        logits, new_cache, _ = self.forward(
+            params, tokens=tokens, embeds=None, mode="decode", cache=cache,
+            pos=pos)
+        # trim Megatron-style vocab padding (pad logits are untrained noise)
+        return logits[..., : self.cfg.vocab_size], new_cache
+
+
+def build_model(cfg: ModelConfig, mesh=None) -> Model:
+    shape = dict(mesh.shape) if mesh is not None else {}
+    rules = ShardingRules(shape, cfg.fsdp, layout=cfg.layout)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        init_ws = lambda key: TF.init_lm(key, cfg, rules)
+        fwd = lambda params, **kw: TF.lm_forward(params, cfg, rules, mesh, **kw)
+        init_cache = lambda batch, max_len, enc_len=0: TF.init_cache(
+            cfg, batch, max_len)
+        cache_specs = lambda batch: TF.cache_specs(cfg, rules, batch)
+    elif cfg.family == "hybrid":
+        init_ws = lambda key: ZB.init_hybrid(key, cfg, rules)
+        fwd = lambda params, **kw: ZB.hybrid_forward(params, cfg, rules, mesh,
+                                                     **kw)
+        init_cache = lambda batch, max_len, enc_len=0: ZB.init_hybrid_cache(
+            cfg, batch, max_len)
+        cache_specs = lambda batch: ZB.hybrid_cache_specs(cfg, rules, batch)
+    elif cfg.family == "ssm":
+        init_ws = lambda key: XL.init_xlstm(key, cfg, rules)
+        fwd = lambda params, **kw: XL.xlstm_forward(params, cfg, rules, mesh,
+                                                    **kw)
+        init_cache = lambda batch, max_len, enc_len=0: XL.init_xlstm_cache(
+            cfg, batch, max_len)
+        cache_specs = lambda batch: XL.xlstm_cache_specs(cfg, rules, batch)
+    elif cfg.family == "audio":
+        init_ws = lambda key: ED.init_encdec(key, cfg, rules, MAX_DEC_POS)
+        fwd = lambda params, **kw: ED.encdec_forward(params, cfg, rules, mesh,
+                                                     **kw)
+        init_cache = lambda batch, max_len, enc_len: ED.init_encdec_cache(
+            cfg, batch, max_len, enc_len)
+        cache_specs = lambda batch: ED.encdec_cache_specs(cfg, rules, batch)
+    else:
+        raise ValueError(cfg.family)
+
+    return Model(cfg=cfg, rules=rules, mesh=mesh,
+                 init=lambda key: init_ws(key)[0],
+                 param_specs=_trace_specs(init_ws), forward=fwd,
+                 init_cache=init_cache, cache_specs=cache_specs)
+
+
+def _trace_specs(init_ws):
+    """Capture the spec tree without allocating params: trace the init under
+    eval_shape and grab the (pure-python) specs through a side channel."""
+    box = {}
+
+    def wrapped(key):
+        params, specs = init_ws(key)
+        box["specs"] = specs
+        return params
+
+    jax.eval_shape(wrapped, jax.random.PRNGKey(0))
+    return box["specs"]

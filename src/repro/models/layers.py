@@ -1,0 +1,662 @@
+"""Shared neural layers: norms, RoPE, embeddings, GQA/MLA attention, MLP.
+
+All layers are functional: ``init_*`` returns ``(params, partition_specs)``
+with identical tree structure; ``*_fwd`` consumes the params. Compute runs
+in ``cfg.dtype`` (bf16) with fp32 softmax/normalization; master params are
+``cfg.param_dtype``.
+
+Attention modes
+---------------
+* ``causal`` / ``bidir`` — full S×T score matrix (training / prefill /
+  encoder). Masked in fp32.
+* ``decode`` — one new token against a KV cache. Two paths:
+  - plain: cache replicated over MODEL_AXIS (kv_heads rarely divide the
+    model axis — GQA's kv=8 vs model=16).
+  - **flash-decode (seq-sharded)**: the cache is sharded over MODEL_AXIS on
+    the *sequence* dim; each shard computes a partial (max, sumexp, out) and
+    the shards merge via a tiny LSE all-reduce — 3 scalars-per-head of
+    traffic instead of an all-gathered cache. This is the beyond-paper
+    optimization for the decode cells (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    DATA_AXIS, MODEL_AXIS, POD_AXIS, ModelConfig, ShardingRules)
+from repro.utils import shard_map
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with fp32-accumulated statistics but bf16 elementwise math.
+
+    The sum-of-squares rides an einsum contraction with fp32 accumulation,
+    so the (B,S,d) stream is never materialized in fp32 — forward OR
+    backward (the fp32 cotangent of a full upcast would otherwise double
+    every residual-stream byte and force fp32 TP all-reduces; see
+    EXPERIMENTS.md §Perf iteration 'norm-traffic')."""
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    return x * inv[..., None] * scale.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None,
+               eps: float) -> jax.Array:
+    """LayerNorm, fp32-accumulated statistics, bf16 elementwise."""
+    d = x.shape[-1]
+    mu = (jnp.einsum("...d->...", x, preferred_element_type=jnp.float32)
+          / d)
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32) / d
+    var = jnp.maximum(ms - mu * mu, 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    mu = mu.astype(x.dtype)
+    inv = inv.astype(x.dtype)
+    y = (x - mu[..., None]) * inv[..., None] * scale.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE (llama half-split convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float):
+    """positions (S,) -> (sin, cos) each (S, dim/2), fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); sin/cos (S, hd/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    s = sin[..., :, None, :]
+    c = cos[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig, rules: ShardingRules):
+    p = {"table": _dense(key, (cfg.padded_vocab, cfg.d_model),
+                         cfg.param_dtype, scale=0.02)}
+    s = {"table": rules.embed(cfg.padded_vocab, cfg.d_model)}
+    return p, s
+
+
+def embed_fwd(p, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return p["table"].astype(cfg.dtype)[tokens]
+
+
+def unembed_fwd(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (B,S,d) -> logits (B,S,V). Vocab dim is TP-sharded by the table."""
+    return jnp.einsum("bsd,vd->bsv", x, p["table"].astype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU; whisper uses GELU via kind='gelu')
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, cfg: ModelConfig, rules: ShardingRules,
+             kind: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        p = {"wi": _dense(ks[0], (d, d_ff), cfg.param_dtype),
+             "wg": _dense(ks[1], (d, d_ff), cfg.param_dtype),
+             "wo": _dense(ks[2], (d_ff, d), cfg.param_dtype)}
+        s = {"wi": rules.col(d, d_ff), "wg": rules.col(d, d_ff),
+             "wo": rules.row(d_ff, d)}
+    else:  # gelu
+        p = {"wi": _dense(ks[0], (d, d_ff), cfg.param_dtype),
+             "wo": _dense(ks[2], (d_ff, d), cfg.param_dtype)}
+        s = {"wi": rules.col(d, d_ff), "wo": rules.row(d_ff, d)}
+    return p, s
+
+
+def mlp_fwd(p, x: jax.Array) -> jax.Array:
+    if "wg" in p:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, rules: ShardingRules):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": _dense(ks[0], (d, H * hd), cfg.param_dtype),
+         "wk": _dense(ks[1], (d, KV * hd), cfg.param_dtype),
+         "wv": _dense(ks[2], (d, KV * hd), cfg.param_dtype),
+         "wo": _dense(ks[3], (H * hd, d), cfg.param_dtype)}
+    s = {"wq": rules.col(d, H * hd), "wk": rules.col(d, KV * hd),
+         "wv": rules.col(d, KV * hd), "wo": rules.row(H * hd, d)}
+    return p, s
+
+
+ATTN_CHUNK_THRESHOLD = 8192   # S above this uses the chunked (flash-style)
+ATTN_CHUNK = 2048             # block size for chunked attention
+
+
+def _constrainer(cfg: ModelConfig, mesh, num_heads: int):
+    """Returns (impl, constrain_fn). impl 'heads' TP-shards the head dim
+    (requires H % model == 0); 'qseq' shards the query sequence dim instead
+    (archs like minicpm3 H=40 / whisper H=8 that don't divide the axis);
+    'dp' (fsdp layout) shards only the batch dim over (data, model).
+    Sharding the (B,H,S,T) scores is what keeps attention transients
+    per-device-small — GSPMD cannot shard the grouped (KV,G) split itself
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    if mesh is None:
+        return "heads", lambda x, spec: x
+
+    def constrain(x, spec):
+        from repro.utils import safe_constrain
+        return safe_constrain(x, mesh, spec)
+
+    if cfg.layout == "fsdp":
+        return "dp", constrain
+    m = mesh.shape.get(MODEL_AXIS, 1)
+    impl = "heads" if num_heads % max(m, 1) == 0 and num_heads >= m else "qseq"
+    return impl, constrain
+
+
+def _repeat_kv(k, g: int):
+    b, t, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, kv, g, hd)) \
+        .reshape(b, t, kv * g, hd)
+
+
+def _mask_scores(scores, *, causal, q_offset, kv_len, s, t):
+    neg = jnp.float32(-1e30)
+    tpos = jnp.arange(t)
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        scores = jnp.where(tpos[None, :] <= qpos[:, None], scores, neg)
+    if kv_len is not None:
+        scores = jnp.where(tpos < kv_len, scores, neg)
+    return scores
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len=None, cfg=None,
+          mesh=None):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd). fp32 softmax.
+
+    KV heads are broadcast to H (repeat-heads GQA) so the score tensor is
+    (B,H,S,T) — TP-shardable on H. Long sequences take a chunked path that
+    never materializes the full score matrix (flash-style; the Pallas
+    kernel kernels/flash_attention.py is the TPU-runtime equivalent).
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    impl, cons = _constrainer(cfg, mesh, h) if cfg is not None else \
+        ("heads", lambda x, spec: x)
+    if impl == "dp":  # fsdp layout: batch over (pod?, data, model)
+        dp = ((POD_AXIS, DATA_AXIS, MODEL_AXIS)
+              if (mesh is not None and POD_AXIS in mesh.axis_names)
+              else (DATA_AXIS, MODEL_AXIS))
+    else:
+        dp = (POD_AXIS, DATA_AXIS) if (mesh is not None and
+                                       POD_AXIS in mesh.axis_names) else \
+            (DATA_AXIS,)
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    if impl == "heads":
+        q = cons(q, P(dp, None, MODEL_AXIS, None))
+        k = cons(k, P(dp, None, MODEL_AXIS, None))
+        v = cons(v, P(dp, None, MODEL_AXIS, None))
+    elif impl == "dp":
+        q = cons(q, P(dp, None, None, None))
+        k = cons(k, P(dp, None, None, None))
+        v = cons(v, P(dp, None, None, None))
+    else:  # qseq: queries sequence-sharded, keys replicated
+        q = cons(q, P(dp, MODEL_AXIS, None, None))
+        k = cons(k, P(dp, None, None, None))
+        v = cons(v, P(dp, None, None, None))
+
+    chunk_it = s > ATTN_CHUNK_THRESHOLD and s % ATTN_CHUNK == 0
+    if not chunk_it:
+        scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+        scores = _mask_scores(scores / math.sqrt(hd), causal=causal,
+                              q_offset=q_offset, kv_len=kv_len, s=s, t=t)
+        if impl == "heads":
+            scores = cons(scores, P(dp, MODEL_AXIS, None, None))
+        elif impl == "dp":
+            scores = cons(scores, P(dp, None, None, None))
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+    if impl in ("heads", "dp"):
+        return _chunked_q(q, k, v, causal=causal, q_offset=q_offset,
+                          kv_len=kv_len, cfg=cfg)
+    return _chunked_k(q, k, v, causal=causal, q_offset=q_offset,
+                      kv_len=kv_len, cfg=cfg)
+
+
+def _chunked_q(q, k, v, *, causal, q_offset, kv_len, cfg):
+    """Loop over query blocks (head-sharded impl: every shard active on its
+    heads each step). Scores transient = (B, H, bq, T)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    bq = min(ATTN_CHUNK, s)
+    nb = s // bq
+    scale = 1.0 / math.sqrt(hd)
+
+    def block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * bq, bq, axis=1)
+        scores = jnp.einsum("bshd,bthd->bhst", qb, k).astype(jnp.float32)
+        scores = _mask_scores(scores * scale, causal=causal,
+                              q_offset=q_offset + qi * bq, kv_len=kv_len,
+                              s=bq, t=t)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    if cfg is not None and cfg.time_unroll:
+        outs = [block(i) for i in range(nb)]
+    else:
+        _, outs = jax.lax.scan(lambda c, i: (c, block(i)), None,
+                               jnp.arange(nb))
+        return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return jnp.concatenate(outs, axis=1)
+
+
+def _chunked_k(q, k, v, *, causal, q_offset, kv_len, cfg):
+    """Online-softmax loop over key blocks (qseq impl: queries stay
+    sequence-sharded; each step all shards process one key block)."""
+    b, s, h, hd = q.shape
+    dv = v.shape[-1]
+    t = k.shape[1]
+    bk = min(ATTN_CHUNK, t)
+    nb = t // bk
+    scale = 1.0 / math.sqrt(hd)
+    qpos = jnp.arange(s) + q_offset
+
+    def block(carry, ki):
+        m_prev, l_prev, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, axis=1)
+        scores = jnp.einsum("bshd,bthd->bhst", q, kb).astype(jnp.float32)
+        scores = scores * scale
+        tpos = ki * bk + jnp.arange(bk)
+        neg = jnp.float32(-1e30)
+        if causal:
+            scores = jnp.where(tpos[None, :] <= qpos[:, None], scores, neg)
+        if kv_len is not None:
+            scores = jnp.where(tpos < kv_len, scores, neg)
+        m_cur = jnp.max(scores, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(q.dtype), vb)
+        # corr (B,H,S,1) -> (B,S,H,1) to scale acc (B,S,H,hd)
+        acc = acc * corr.transpose(0, 2, 1, 3).astype(q.dtype) + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, s, h, dv), q.dtype)
+    if cfg is not None and cfg.time_unroll:
+        carry = (m0, l0, a0)
+        for i in range(nb):
+            carry, _ = block(carry, i)
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), jnp.arange(nb))
+    return acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_layout(mesh, batch: int):
+    """(batch_axes | None, seq_axes) for decode-cell sharding.
+
+    Normal decode (batch divides the DP axes): batch over DP, cache
+    sequence over MODEL. Small-batch long-context decode (e.g. the
+    long_500k cell, B=1): batch unsharded, cache sequence over EVERY mesh
+    axis — 500k of KV spread across all 256/512 chips, merged by the
+    flash-decode LSE reduction.
+    """
+    dp = (POD_AXIS, DATA_AXIS) if POD_AXIS in mesh.axis_names else (DATA_AXIS,)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if batch % dp_size == 0 and batch >= dp_size:
+        return dp, (MODEL_AXIS,)
+    return None, tuple(mesh.axis_names)
+
+
+def _multi_axis_index(axes, mesh_shape):
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh_shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _flash_decode_shard(q, k, v, kv_len, axes: tuple, mesh_shape: dict):
+    """Per-shard flash-decoding body (inside shard_map over `axes`).
+
+    q (B,S=1,KV,G,hd) replicated over `axes`; k/v (B,T_loc,KV,hd) = this
+    shard's slice of the sequence dim; kv_len = global filled length.
+    Combines shards with an LSE merge: traffic = (B,KV,G) * 3 scalars.
+    """
+    B, S, KV, G, hd = q.shape
+    t_loc = k.shape[1]
+    idx = _multi_axis_index(axes, mesh_shape)
+    tpos = idx * t_loc + jnp.arange(t_loc)  # global positions of this slice
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(tpos < kv_len, scores, jnp.float32(-1e30))
+    m = jnp.max(scores, axis=-1, keepdims=True)            # (B,KV,G,S,1)
+    e = jnp.exp(scores - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgst,btkh->bskgh", e.astype(q.dtype), v)
+    # LSE merge across shards
+    M = jax.lax.pmax(m, axes)
+    corr = jnp.exp(m - M)
+    l_g = jax.lax.psum(l * corr, axes)
+    o_g = jax.lax.psum(o * corr.transpose(0, 3, 1, 2, 4).astype(q.dtype),
+                       axes)
+    return (o_g / l_g.transpose(0, 3, 1, 2, 4).astype(q.dtype)).reshape(
+        B, S, KV * G, hd)
+
+
+def attention_fwd(p, x: jax.Array, cfg: ModelConfig, *, mode: str,
+                  rope=None, cache=None, pos=None, x_kv=None, mesh=None,
+                  q_offset=0):
+    """Unified attention. Returns (out, new_cache).
+
+    mode: 'causal' | 'bidir' | 'decode' | 'cross' | 'cross_decode'.
+    cache: {'k','v'} (B, S_max, KV, hd) for self-decode; for cross modes the
+    cache holds the (static) encoder K/V. pos: scalar int32 write position.
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt)).reshape(B, S, H, hd)
+
+    if mode in ("cross", "cross_decode"):
+        if mode == "cross":  # build cross K/V from encoder output x_kv
+            k = jnp.einsum("bsd,dh->bsh", x_kv, p["wk"].astype(dt)) \
+                .reshape(B, -1, KV, hd)
+            v = jnp.einsum("bsd,dh->bsh", x_kv, p["wv"].astype(dt)) \
+                .reshape(B, -1, KV, hd)
+            new_cache = {"k": k, "v": v}
+        else:
+            k, v = cache["k"], cache["v"]
+            new_cache = cache
+        out = _sdpa(q, k.astype(dt), v.astype(dt), causal=False, cfg=cfg,
+                    mesh=mesh)
+        out = out.reshape(B, S, H * hd)
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), new_cache
+
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt)).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt)).reshape(B, S, KV, hd)
+    if rope is not None:
+        sin, cos = rope
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+
+    if mode in ("causal", "bidir"):
+        out = _sdpa(q, k, v, causal=(mode == "causal"), q_offset=q_offset,
+                    cfg=cfg, mesh=mesh)
+        new_cache = None
+        if cache is not None:  # prefill into a bigger cache
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            }
+        out = out.reshape(B, S, H * hd)
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), new_cache
+
+    assert mode == "decode", mode
+    kc = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    new_cache = {"k": kc, "v": vc}
+    kv_len = pos + S
+    if mesh is not None and cfg.decode_seq_shard and \
+            mesh.shape.get(MODEL_AXIS, 1) > 1:
+        G = H // KV
+        qg = q.reshape(B, S, KV, G, hd)
+        batch, seq_axes = decode_layout(mesh, B)
+        out = shard_map(
+            partial(_flash_decode_shard, axes=seq_axes,
+                    mesh_shape=dict(mesh.shape)),
+            mesh=mesh,
+            in_specs=(P(batch, None, None, None, None),
+                      P(batch, seq_axes, None, None),
+                      P(batch, seq_axes, None, None),
+                      P()),
+            out_specs=P(batch, None, None, None),
+        )(qg, kc.astype(dt), vc.astype(dt), jnp.asarray(kv_len, jnp.int32))
+    else:
+        out = _sdpa(q, kc.astype(dt), vc.astype(dt), causal=True,
+                    q_offset=pos, kv_len=kv_len, cfg=cfg, mesh=mesh)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    dtype = dtype or cfg.dtype
+    return {"k": jnp.zeros((batch, max_len, KV, hd), dtype),
+            "v": jnp.zeros((batch, max_len, KV, hd), dtype)}
+
+
+def attn_cache_specs(cfg: ModelConfig, rules: ShardingRules, batch: int):
+    """Cache specs: batch over DP + sequence over MODEL (flash-decode);
+    small-batch long-context flips to sequence-over-everything."""
+    b, seq = rules.decode_layout(batch, cfg.decode_seq_shard)
+    return {"k": P(b, seq, None, None), "v": P(b, seq, None, None)}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3 / deepseek-style latent KV)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, rules: ShardingRules):
+    d, H = cfg.d_model, cfg.num_heads
+    ql, kvl = cfg.mla_q_lora, cfg.mla_kv_lora
+    nd, rd, vd = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    ks = jax.random.split(key, 7)
+    p = {"w_dq": _dense(ks[0], (d, ql), cfg.param_dtype),
+         "q_norm": init_norm(ql, cfg.param_dtype),
+         "w_uq": _dense(ks[1], (ql, H * (nd + rd)), cfg.param_dtype),
+         "w_dkv": _dense(ks[2], (d, kvl + rd), cfg.param_dtype),
+         "kv_norm": init_norm(kvl, cfg.param_dtype),
+         "w_uk": _dense(ks[3], (kvl, H * nd), cfg.param_dtype),
+         "w_uv": _dense(ks[4], (kvl, H * vd), cfg.param_dtype),
+         "wo": _dense(ks[5], (H * vd, d), cfg.param_dtype)}
+    s = {"w_dq": rules.col(d, ql), "q_norm": rules.vec(),
+         "w_uq": rules.col(ql, H * (nd + rd)),
+         "w_dkv": P(None, None), "kv_norm": rules.vec(),
+         "w_uk": rules.col(kvl, H * nd), "w_uv": rules.col(kvl, H * vd),
+         "wo": rules.row(H * vd, d)}
+    return p, s
+
+
+def mla_fwd(p, x: jax.Array, cfg: ModelConfig, *, mode: str, rope,
+            cache=None, pos=None, mesh=None):
+    """MLA. Cache stores the *latents* (c_kv, k_rope) — the serving win.
+
+    prefill/train: materialize per-head K/V. decode: absorbed attention in
+    latent space (q·W_uk folded into q) — never materializes K/V.
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nd, rd, vd = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvl = cfg.mla_kv_lora
+    dt = x.dtype
+    sin, cos = rope
+
+    cq = rms_norm(jnp.einsum("bsd,dq->bsq", x, p["w_dq"].astype(dt)),
+                  p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qh->bsh", cq, p["w_uq"].astype(dt)) \
+        .reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, sin, cos)
+
+    dkv = jnp.einsum("bsd,dk->bsk", x, p["w_dkv"].astype(dt))
+    c_kv = rms_norm(dkv[..., :kvl], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., kvl:][:, :, None, :], sin, cos)[:, :, 0, :]
+
+    scale = 1.0 / math.sqrt(nd + rd)
+    w_uk = p["w_uk"].astype(dt).reshape(kvl, H, nd)
+
+    if mode in ("causal", "prefill"):
+        k_nope = jnp.einsum("bsk,khn->bshn", c_kv, w_uk)
+        v = jnp.einsum("bsk,khv->bshv", c_kv,
+                       p["w_uv"].astype(dt).reshape(kvl, H, vd))
+        kr = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rd))
+        k_full = jnp.concatenate([k_nope, kr], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        ctx = _sdpa(q_full, k_full, v, causal=True, cfg=cfg, mesh=mesh)
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice(
+                    cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
+                "k_rope": jax.lax.dynamic_update_slice(
+                    cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                    (0, 0, 0)),
+            }
+    else:  # decode — absorbed/latent attention
+        assert mode == "decode"
+        q_lat = jnp.einsum("bshn,khn->bshk", q_nope, w_uk)     # absorb W_uk
+        if mesh is not None and cfg.mla_seq_shard and \
+                mesh.shape.get(MODEL_AXIS, 1) > 1:
+            batch, seq_axes = decode_layout(mesh, B)
+            ctx_lat, ckv_c, kr_c = shard_map(
+                partial(_mla_flash_decode_shard, scale=scale, axes=seq_axes,
+                        mesh_shape=dict(mesh.shape)),
+                mesh=mesh,
+                in_specs=(P(batch, None, None, None),
+                          P(batch, None, None, None),
+                          P(batch, None, None), P(batch, None, None),
+                          P(batch, seq_axes, None), P(batch, seq_axes, None),
+                          P()),
+                out_specs=(P(batch, None, None, None),
+                           P(batch, seq_axes, None),
+                           P(batch, seq_axes, None)),
+            )(q_lat, q_rope, c_kv, k_rope, cache["c_kv"], cache["k_rope"],
+              jnp.asarray(pos, jnp.int32))
+            new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+        else:
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+            kr_c = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, pos, 0))
+            new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+            scores = (jnp.einsum("bshk,btk->bhst", q_lat, ckv_c.astype(dt)) +
+                      jnp.einsum("bshr,btr->bhst", q_rope, kr_c.astype(dt)))
+            scores = scores.astype(jnp.float32) * scale
+            kv_len = pos + S
+            scores = jnp.where(
+                jnp.arange(cache["c_kv"].shape[1])[None, :] < kv_len,
+                scores, jnp.float32(-1e30))
+            probs = jax.nn.softmax(scores, -1).astype(dt)
+            ctx_lat = jnp.einsum("bhst,btk->bshk", probs, ckv_c.astype(dt))
+        ctx = jnp.einsum("bshk,khv->bshv", ctx_lat,
+                         p["w_uv"].astype(dt).reshape(kvl, H, vd))
+
+    out = ctx.reshape(B, S, H * vd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), new_cache
+
+
+def _mla_flash_decode_shard(q_lat, q_rope, ckv_new, kr_new, ckv_cache,
+                            kr_cache, pos, *, scale: float, axes: tuple,
+                            mesh_shape: dict):
+    """Seq-sharded MLA flash decode (latent cache split over `axes`).
+
+    q_lat (B,1,H,kvl), q_rope (B,1,H,rd) replicated over axes; the latent
+    caches (B,T_loc,kvl/rd) hold this shard's sequence slice. The write
+    position lands on exactly one shard (masked DUS); attention merges
+    across shards with the LSE reduction, with the *latent* c_kv acting as
+    the value — W_uv is applied after the merge (EXPERIMENTS.md §Perf,
+    minicpm3 decode hillclimb)."""
+    b, one, h, kvl = q_lat.shape
+    t_loc = ckv_cache.shape[1]
+    idx = _multi_axis_index(axes, mesh_shape)
+    lo = idx * t_loc
+    lp = pos - lo
+    in_r = (lp >= 0) & (lp < t_loc)
+    lp_c = jnp.clip(lp, 0, t_loc - 1)
+    ckv_upd = jax.lax.dynamic_update_slice(
+        ckv_cache, ckv_new.astype(ckv_cache.dtype), (0, lp_c, 0))
+    ckv_c = jnp.where(in_r, ckv_upd, ckv_cache)
+    kr_upd = jax.lax.dynamic_update_slice(
+        kr_cache, kr_new.astype(kr_cache.dtype), (0, lp_c, 0))
+    kr_c = jnp.where(in_r, kr_upd, kr_cache)
+
+    dt = q_lat.dtype
+    scores = (jnp.einsum("bshk,btk->bhst", q_lat, ckv_c.astype(dt)) +
+              jnp.einsum("bshr,btr->bhst", q_rope, kr_c.astype(dt)))
+    scores = scores.astype(jnp.float32) * scale
+    tpos = lo + jnp.arange(t_loc)
+    scores = jnp.where(tpos < pos + 1, scores, jnp.float32(-1e30))
+    m = jnp.max(scores, axis=-1, keepdims=True)        # (B,H,1,1)
+    e = jnp.exp(scores - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bhst,btk->bshk", e.astype(dt), ckv_c.astype(dt))
+    big_m = jax.lax.pmax(m, axes)
+    corr = jnp.exp(m - big_m)                          # (B,H,1,1)
+    l_g = jax.lax.psum(l * corr, axes)
+    o_g = jax.lax.psum(o * corr.transpose(0, 2, 1, 3).astype(dt), axes)
+    ctx_lat = o_g / l_g.transpose(0, 2, 1, 3).astype(dt)
+    return ctx_lat, ckv_c, kr_c
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.mla_kv_lora), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.mla_rope_dim), dtype)}
+
+
+def mla_cache_specs(cfg: ModelConfig, rules: ShardingRules, batch: int):
+    b, seq = rules.decode_layout(batch, cfg.mla_seq_shard)
+    return {"c_kv": P(b, seq, None), "k_rope": P(b, seq, None)}

@@ -1,0 +1,186 @@
+"""Chunked gated linear attention — the shared engine for Mamba2 SSD and
+xLSTM's mLSTM — plus the sLSTM associative scan.
+
+Both Mamba2 (state-space duality form) and mLSTM compute
+
+    y_t = q_t · h_t,   h_t = a_t * h_{t-1} + k_t v_tᵀ        (per head)
+
+with a scalar per-step decay ``a_t = exp(log_a_t)``. The TPU-native
+evaluation is **chunkwise**: within a chunk of Q steps the contribution is a
+dense Q×Q masked matmul (MXU work, like attention); across chunks a
+recurrence carries the (K, V) state matrix. Sequential work is S/Q steps
+instead of S — the sub-quadratic path that makes the ``long_500k`` cells
+runnable (O(S·Q) + O(S/Q) instead of O(S²)).
+
+``time_unroll=True`` unrolls the chunk loop in Python — used by the
+roofline extractor so ``cost_analysis`` sees every chunk (XLA counts a
+``while`` body once; see DESIGN.md §5).
+
+Numerics note (DESIGN.md hardware-adaptation): xLSTM's exponential gating
+with running-max stabilizer is replaced by sigmoid input/forget gates with
+a carried normalizer — chunk-stable without per-row running-max state, FLOP
+and memory structure identical. The normalizer rides the GLA as an extra
+value column (v augmented with ones), so numerator and denominator come out
+of one scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q: jax.Array, k: jax.Array, v: jax.Array, log_a: jax.Array,
+                *, chunk: int, initial_state: jax.Array | None = None,
+                unroll: bool = False):
+    """Gated linear attention, chunkwise-parallel.
+
+    q, k: (B, S, H, K);  v: (B, S, H, V);  log_a: (B, S, H) with log_a <= 0.
+    Returns (y (B, S, H, V), final_state (B, H, K, V) fp32).
+    S must be a multiple of `chunk`.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk:  # pad to a chunk multiple: k=0 rows are absorbing
+        pad = chunk - s % chunk
+        padt = lambda x: jnp.pad(x, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (x.ndim - 2))
+        y, h_final = chunked_gla(padt(q), padt(k), padt(v), padt(log_a),
+                                 chunk=chunk, initial_state=initial_state,
+                                 unroll=unroll)
+        return y[:, :s], h_final
+    nc, cq = s // chunk, chunk
+    dt = q.dtype
+
+    qc = q.reshape(b, nc, cq, h, dk)
+    kc = k.reshape(b, nc, cq, h, dk)
+    vc = v.reshape(b, nc, cq, h, dv)
+    la = log_a.reshape(b, nc, cq, h).astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=2)                      # inclusive ∑_{r<=t}
+    total = cum[:, :, -1, :]                          # (B, NC, H)
+
+    # --- intra-chunk: masked decay-weighted scores (the MXU part) ----------
+    # w[t,s] = (q_t·k_s) * exp(cum_t - cum_s) for s <= t
+    scores = jnp.einsum("bnqhk,bnshk->bnhqs", qc, kc).astype(jnp.float32)
+    ct = cum.transpose(0, 1, 3, 2)                    # (B, NC, H, Q)
+    decay = jnp.exp(ct[..., :, None] - ct[..., None, :])  # [q,s] = cum_q-cum_s
+    mask = jnp.tril(jnp.ones((cq, cq), bool))
+    w = jnp.where(mask[None, None, None], scores * decay, 0.0)
+    y_intra = jnp.einsum("bnhqs,bnshv->bnqhv", w.astype(dt), vc)
+
+    # --- per-chunk state contribution & inter-chunk recurrence -------------
+    # S_n = Σ_s exp(total_n - cum_s) k_s v_sᵀ
+    kd = kc.astype(jnp.float32) * jnp.exp(total[:, :, None] - cum)[..., None]
+    s_chunk = jnp.einsum("bnshk,bnshv->bnhkv", kd, vc.astype(jnp.float32))
+
+    def step(h_prev, xs):
+        s_n, tot_n, q_n, cum_n = xs
+        # inter contribution for this chunk, from the carried state
+        qd = q_n.astype(jnp.float32) * jnp.exp(cum_n)[..., None]
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", qd, h_prev)
+        h_new = jnp.exp(tot_n)[..., None, None] * h_prev + s_n
+        return h_new, y_inter
+
+    h0 = initial_state if initial_state is not None else \
+        jnp.zeros((b, h, dk, dv), jnp.float32)
+    xs = (
+        s_chunk.transpose(1, 0, 2, 3, 4),       # (NC, B, H, K, V)
+        total.transpose(1, 0, 2),               # (NC, B, H)
+        qc.transpose(1, 0, 2, 3, 4),            # (NC, B, Q, H, K)
+        cum.transpose(1, 0, 2, 3),              # (NC, B, Q, H)
+    )
+    if unroll:
+        hs, ys = h0, []
+        for n in range(nc):
+            hs, y_n = step(hs, jax.tree.map(lambda x: x[n], xs))
+            ys.append(y_n)
+        h_final = hs
+        y_inter = jnp.stack(ys, 0)
+    else:
+        h_final, y_inter = jax.lax.scan(step, h0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    y = y_intra.reshape(b, s, h, dv) + y_inter.astype(dt)
+    return y, h_final
+
+
+def gla_decode_step(q, k, v, log_a, state):
+    """One recurrent step. q/k (B,H,K), v (B,H,V), log_a (B,H),
+    state (B,H,K,V) fp32. Returns (y (B,H,V), new_state)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    new_state = a * state + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), new_state)
+    return y.astype(q.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory recurrence via associative scan
+# ---------------------------------------------------------------------------
+
+
+def slstm_scan(i: jax.Array, f: jax.Array, z: jax.Array, o: jax.Array,
+               c0: jax.Array | None = None, n0: jax.Array | None = None):
+    """Stabilized scalar LSTM recurrence, parallel over time.
+
+        c_t = f_t c_{t-1} + i_t z_t
+        n_t = f_t n_{t-1} + i_t
+        h_t = o_t * c_t / max(n_t, 1)
+
+    i, f in (0,1) (sigmoid gates — see module docstring), z, o: (B, S, D).
+    The linear recurrences run as one associative scan over a stacked
+    (c, n) pair. Returns (h (B,S,D), (c_S, n_S) final state (B,D)).
+    """
+    b, s, d = i.shape
+    ii = i.astype(jnp.float32)
+    ff = f.astype(jnp.float32)
+    zz = z.astype(jnp.float32)
+    # elements (a_t, u_t) composing as (a2*a1, a2*u1 + u2); stack c and n
+    # along a new leading axis so one scan solves both.
+    a = jnp.stack([ff, ff], 0)                       # (2, B, S, D)
+    u = jnp.stack([ii * zz, ii], 0)
+
+    def combine(lhs, rhs):
+        a1, u1 = lhs
+        a2, u2 = rhs
+        return a1 * a2, a2 * u1 + u2
+
+    if c0 is not None:
+        # fold the initial state into the first step's input term
+        u = u.at[:, :, 0, :].add(a[:, :, 0, :] * jnp.stack([c0, n0], 0))
+    av, uv = jax.lax.associative_scan(combine, (a, u), axis=2)
+    c, n = uv[0], uv[1]
+    h = o.astype(jnp.float32) * c / jnp.maximum(n, 1.0)
+    return h.astype(i.dtype), (c[:, -1], n[:, -1])
+
+
+def slstm_decode_step(i, f, z, o, state):
+    """One sLSTM step. gates (B, D); state (c, n) each (B, D) fp32."""
+    c, n = state
+    ii, ff = i.astype(jnp.float32), f.astype(jnp.float32)
+    c = ff * c + ii * z.astype(jnp.float32)
+    n = ff * n + ii
+    h = o.astype(jnp.float32) * c / jnp.maximum(n, 1.0)
+    return h.astype(i.dtype), (c, n)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (mamba2 / mLSTM short conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                          cache: jax.Array | None = None):
+    """x (B, S, C), w (K, C) depthwise causal conv.
+
+    cache (B, K-1, C) holds the trailing context from the previous call
+    (decode); returns (y (B, S, C), new_cache (B, K-1, C)).
+    """
+    b, s, c = x.shape
+    kk = w.shape[0]
+    if cache is None:
+        xp = jnp.concatenate([jnp.zeros((b, kk - 1, c), x.dtype), x], axis=1)
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    for j in range(kk):  # K is 4: unrolled adds, no gather
+        y = y + xp[:, j : j + s, :] * w[j][None, None, :].astype(x.dtype)
+    return y, xp[:, -(kk - 1):, :]

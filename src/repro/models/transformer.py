@@ -1,0 +1,210 @@
+"""Unified decoder-only transformer: dense GQA, MLA, MoE, VLM backbone.
+
+One scan-over-layers program covers 7 of the 10 assigned architectures
+(llama3-8b, granite-3-2b, stablelm-12b, internvl2-76b backbone,
+minicpm3-4b via MLA, qwen2-moe-a2.7b and dbrx-132b via MoE). Layer params
+are stacked on a leading L dim and scanned (compile-time O(1) in depth);
+``cfg.scan_layers=False`` unrolls instead (the roofline extractor lowers
+unrolled L∈{1,2} to undo XLA's count-while-body-once accounting,
+DESIGN.md §5).
+
+The VLM frontend is a stub per the assignment: ``embeds`` (precomputed
+patch embeddings, (B, n_front, d)) are projected and prepended to the token
+embeddings; loss is masked to text positions.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as NN
+from repro.models import moe as MOE
+from repro.models.common import (
+    MODEL_AXIS, ModelConfig, ShardingRules, stack_layer_specs)
+
+AUX_ZERO = {"moe_aux": jnp.float32(0), "moe_dropped": jnp.float32(0)}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, rules: ShardingRules):
+    ks = jax.random.split(key, 4)
+    if cfg.attn_kind == "mla":
+        attn_p, attn_s = NN.init_mla(ks[0], cfg, rules)
+    else:
+        attn_p, attn_s = NN.init_attention(ks[0], cfg, rules)
+    p = {"ln1": NN.init_norm(cfg.d_model, cfg.param_dtype), "attn": attn_p,
+         "ln2": NN.init_norm(cfg.d_model, cfg.param_dtype)}
+    s = {"ln1": rules.vec(), "attn": attn_s, "ln2": rules.vec()}
+    if cfg.moe_num_experts:
+        p["moe"], s["moe"] = MOE.init_moe(ks[1], cfg, rules)
+    else:
+        p["mlp"], s["mlp"] = NN.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg,
+                                         rules)
+    return p, s
+
+
+def init_lm(key, cfg: ModelConfig, rules: ShardingRules):
+    ks = jax.random.split(key, 5)
+    embed_p, embed_s = NN.init_embed(ks[0], cfg, rules)
+    layer_keys = jax.random.split(ks[1], cfg.num_layers)
+    lp, ls = jax.vmap(lambda k: init_block(k, cfg, rules)[0])(layer_keys), None
+    _, ls = init_block(ks[1], cfg, rules)  # specs from a single block
+    params = {
+        "embed": embed_p,
+        "layers": lp,
+        "final_norm": NN.init_norm(cfg.d_model, cfg.param_dtype),
+    }
+    specs = {
+        "embed": embed_s,
+        "layers": stack_layer_specs(ls, cfg.num_layers),
+        "final_norm": rules.vec(),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = NN._dense(ks[2], (cfg.padded_vocab, cfg.d_model),
+                                      cfg.param_dtype)
+        specs["lm_head"] = rules.embed(cfg.padded_vocab, cfg.d_model)
+    if cfg.frontend == "vision_stub":
+        params["front_proj"] = NN._dense(ks[3], (cfg.d_model, cfg.d_model),
+                                         cfg.param_dtype)
+        specs["front_proj"] = rules.col(cfg.d_model, cfg.d_model)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(p, x, cfg: ModelConfig, rules, mesh, *, rope, mode, cache,
+               pos):
+    h = NN.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a, new_cache = NN.mla_fwd(p["attn"], h, cfg, mode=mode, rope=rope,
+                                  cache=cache, pos=pos, mesh=mesh)
+    else:
+        a, new_cache = NN.attention_fwd(p["attn"], h, cfg, mode=mode,
+                                        rope=rope, cache=cache, pos=pos,
+                                        mesh=mesh)
+    x = x + a
+    h = NN.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe_num_experts:
+        m, aux = MOE.moe_fwd(p["moe"], h, cfg, rules, mesh)
+    else:
+        m, aux = NN.mlp_fwd(p["mlp"], h), dict(AUX_ZERO)
+    return x + m, new_cache, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # 'full'
+
+
+def _run_layers_unrolled(layer_params, x, cfg, rules, mesh, *, rope, mode,
+                         cache, pos):
+    aux_tot = dict(AUX_ZERO)
+    ncaches = []
+    for i in range(cfg.num_layers):
+        pl = jax.tree.map(lambda v: v[i], layer_params)
+        cl = jax.tree.map(lambda v: v[i], cache) if cache is not None else None
+        fn = _remat(partial(_block_fwd, cfg=cfg, rules=rules, mesh=mesh,
+                            rope=rope, mode=mode, pos=pos), cfg)
+        x, ncl, aux = fn(pl, x, cache=cl)
+        aux_tot = {k: aux_tot[k] + aux[k] for k in aux_tot}
+        if cache is not None:
+            ncaches.append(ncl)
+    ncache = None
+    if cache is not None:
+        ncache = jax.tree.map(lambda *vs: jnp.stack(vs, 0), *ncaches)
+    return x, ncache, aux_tot
+
+
+def lm_forward(params, cfg: ModelConfig, rules: ShardingRules, mesh, *,
+               tokens: jax.Array, embeds: jax.Array | None = None,
+               mode: str = "causal", cache=None, pos=None):
+    """Returns (logits (B, S_total, V), new_cache, aux).
+
+    tokens (B, S_text); embeds (B, n_front, d) prepended after projection
+    (VLM stub). mode 'causal' (train/prefill) or 'decode' (S_text == 1).
+    """
+    x = NN.embed_fwd(params["embed"], tokens, cfg)
+    if embeds is not None:
+        e = jnp.einsum("bnd,dk->bnk", embeds.astype(cfg.dtype),
+                       params["front_proj"].astype(cfg.dtype))
+        x = jnp.concatenate([e, x], axis=1)
+    b, s = x.shape[:2]
+
+    rope_dim = cfg.mla_rope_dim if cfg.attn_kind == "mla" else cfg.hd
+    start = 0 if mode != "decode" else pos
+    positions = jnp.arange(s) + (start if start is not None else 0)
+    rope = NN.rope_tables(positions, rope_dim, cfg.rope_theta)
+
+    if cfg.scan_layers:
+        x, ncache, aux = _run_layers_scan(
+            params["layers"], x, cfg, rules, mesh, rope=rope, mode=mode,
+            cache=cache, pos=pos)
+    else:
+        x, ncache, aux = _run_layers_unrolled(
+            params["layers"], x, cfg, rules, mesh, rope=rope, mode=mode,
+            cache=cache, pos=pos)
+
+    x = NN.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else {"table": params["lm_head"]}
+    logits = NN.unembed_fwd(head, x, cfg)
+    return logits, ncache, aux
+
+
+def _run_layers_scan(layer_params, x, cfg, rules, mesh, *, rope, mode, cache,
+                     pos):
+    def body_nc(carry, pl):
+        y, _, aux = _block_fwd(pl, carry, cfg, rules, mesh, rope=rope,
+                               mode=mode, cache=None, pos=pos)
+        return y, aux
+
+    def body_c(carry, xs):
+        pl, cl = xs
+        y, ncl, aux = _block_fwd(pl, carry, cfg, rules, mesh, rope=rope,
+                                 mode=mode, cache=cl, pos=pos)
+        return y, (ncl, aux)
+
+    if cache is None:
+        fn = _remat(body_nc, cfg)
+        x, auxs = jax.lax.scan(fn, x, layer_params)
+        return x, None, jax.tree.map(jnp.sum, auxs)
+    fn = _remat(body_c, cfg)
+    x, (ncache, auxs) = jax.lax.scan(fn, x, (layer_params, cache))
+    return x, ncache, jax.tree.map(jnp.sum, auxs)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked (L, ...) decode cache."""
+    if cfg.attn_kind == "mla":
+        one = NN.init_mla_cache(cfg, batch, max_len)
+    else:
+        one = NN.init_attn_cache(cfg, batch, max_len)
+    return jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape), one)
+
+
+def cache_specs(cfg: ModelConfig, rules: ShardingRules, batch: int):
+    if cfg.attn_kind == "mla":
+        one = NN.mla_cache_specs(cfg, rules, batch)
+    else:
+        one = NN.attn_cache_specs(cfg, rules, batch)
+    return jax.tree.map(lambda s: P(None, *s), one,
+                        is_leaf=lambda v: isinstance(v, P))

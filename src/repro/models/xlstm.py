@@ -1,0 +1,332 @@
+"""xLSTM LM: mLSTM (matrix-memory) + sLSTM (scalar-memory) blocks.
+
+xlstm-1.3b layout: 48 blocks, one sLSTM per ``slstm_every=8`` (rest mLSTM,
+the paper's 7:1 ratio) — scanned per period (7 stacked mLSTM + 1 sLSTM).
+The mLSTM runs on the shared chunked-GLA engine (``recurrent.py``) with the
+normalizer riding as an augmented value column; the sLSTM runs as one
+associative scan. Both are O(S) — this and zamba2 are the archs that run
+the ``long_500k`` cells.
+
+Numerics simplification (documented, DESIGN.md): sigmoid input/forget gates
+instead of exponential-gating + running-max stabilizer; FLOP/memory/state
+structure identical.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as NN
+from repro.models.common import ModelConfig, ShardingRules, stack_layer_specs
+from repro.models.recurrent import (
+    causal_depthwise_conv, chunked_gla, gla_decode_step, slstm_decode_step,
+    slstm_scan)
+from repro.models.transformer import _remat
+from repro.utils import round_up
+
+AUX0 = {"moe_aux": jnp.float32(0), "moe_dropped": jnp.float32(0)}
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model
+    h = cfg.num_heads
+    return d_in, h, d_in // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg: ModelConfig, rules: ShardingRules):
+    d = cfg.d_model
+    d_in, h, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln": NN.init_norm(d, cfg.param_dtype),
+        "up": NN._dense(ks[0], (d, 2 * d_in), cfg.param_dtype),
+        "conv_w": NN._dense(ks[1], (cfg.ssm_conv, d_in), cfg.param_dtype,
+                            scale=0.5),
+        # block-diagonal per-head q/k projections (xLSTM BlockLinear); v is
+        # the unprojected inner activation — matches the 1.3b param budget
+        "wq": NN._dense(ks[2], (h, hd, hd), cfg.param_dtype),
+        "wk": NN._dense(ks[3], (h, hd, hd), cfg.param_dtype),
+        "w_ig": NN._dense(ks[5], (d_in, h), cfg.param_dtype),
+        "b_ig": jnp.zeros((h,), cfg.param_dtype),
+        "w_fg": NN._dense(ks[6], (d_in, h), cfg.param_dtype),
+        "b_fg": jnp.full((h,), 3.0, cfg.param_dtype),   # open forget gates
+        "gnorm": NN.init_norm(d_in, cfg.param_dtype),
+        "skip": jnp.ones((d_in,), cfg.param_dtype),
+        "down": NN._dense(ks[7], (d_in, d), cfg.param_dtype),
+    }
+    s = {
+        "ln": rules.vec(), "up": rules.col(d, 2 * d_in), "conv_w": P(None, None),
+        # block-diag q/k: FSDP-shard the contraction dim (gather-on-use)
+        "wq": P(None, rules._fs(hd), None), "wk": P(None, rules._fs(hd), None),
+        "w_ig": P(None, None),
+        "b_ig": rules.vec(), "w_fg": P(None, None), "b_fg": rules.vec(),
+        "gnorm": rules.vec(), "skip": rules.vec(), "down": rules.row(d_in, d),
+    }
+    return p, s
+
+
+def mlstm_fwd(p, x, cfg: ModelConfig, *, cache=None, decode=False):
+    """cache = {'conv': (B,K-1,d_in), 'state': (B,H,hd,hd+1) fp32}."""
+    b, s, d = x.shape
+    d_in, h, hd = _mlstm_dims(cfg)
+    dt = x.dtype
+    hx = NN.rms_norm(x, p["ln"], cfg.norm_eps)
+    ui = jnp.einsum("bsd,dk->bsk", hx, p["up"].astype(dt))
+    xi, z = ui[..., :d_in], ui[..., d_in:]
+    xc, new_conv = causal_depthwise_conv(
+        xi, p["conv_w"], cache["conv"] if cache is not None else None)
+    xc = jax.nn.silu(xc)
+    xch = xc.reshape(b, s, h, hd)
+    q = jnp.einsum("bshk,hkj->bshj", xch, p["wq"].astype(dt))
+    k = jnp.einsum("bshk,hkj->bshj", xch, p["wk"].astype(dt))
+    k = k / jnp.sqrt(jnp.float32(hd)).astype(dt)
+    v = xi.reshape(b, s, h, hd)
+    ig = jax.nn.sigmoid(jnp.einsum("bsk,kh->bsh", xi, p["w_ig"].astype(dt))
+                        .astype(jnp.float32) + p["b_ig"].astype(jnp.float32))
+    fg = jax.nn.sigmoid(jnp.einsum("bsk,kh->bsh", xi, p["w_fg"].astype(dt))
+                        .astype(jnp.float32) + p["b_fg"].astype(jnp.float32))
+    log_a = jnp.log(fg + 1e-6)
+    kt = k * ig[..., None].astype(dt)               # fold input gate into k
+    v_aug = jnp.concatenate([v, jnp.ones((b, s, h, 1), dt)], -1)
+
+    if decode:
+        assert s == 1
+        y_aug, new_state = gla_decode_step(
+            q[:, 0], kt[:, 0], v_aug[:, 0], log_a[:, 0], cache["state"])
+        y_aug = y_aug[:, None]
+    else:
+        init = cache["state"] if cache is not None else None
+        y_aug, new_state = chunked_gla(
+            q, kt, v_aug, log_a, chunk=min(cfg.ssm_chunk, s),
+            initial_state=init, unroll=cfg.time_unroll)
+    y, denom = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(denom.astype(jnp.float32)), 1.0).astype(dt)
+    y = y.reshape(b, s, d_in)
+    y = NN.rms_norm(y, p["gnorm"], cfg.norm_eps) + xc * p["skip"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["down"].astype(dt))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": new_state}
+    return x + out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    d_in, h, hd = _mlstm_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in), cfg.dtype),
+            "state": jnp.zeros((batch, h, hd, hd + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (+ its post-up FFN, PF 4/3)
+# ---------------------------------------------------------------------------
+
+
+def _slstm_ff(cfg: ModelConfig) -> int:
+    return round_up(int(cfg.d_model * 4 / 3), 128)
+
+
+def init_slstm_block(key, cfg: ModelConfig, rules: ShardingRules):
+    d = cfg.d_model
+    ff = _slstm_ff(cfg)
+    ks = jax.random.split(key, 6)
+    p = {"ln": NN.init_norm(d, cfg.param_dtype),
+         "wi": NN._dense(ks[0], (d, d), cfg.param_dtype),
+         "wf": NN._dense(ks[1], (d, d), cfg.param_dtype),
+         "wz": NN._dense(ks[2], (d, d), cfg.param_dtype),
+         "wo": NN._dense(ks[3], (d, d), cfg.param_dtype),
+         "b_i": jnp.zeros((d,), cfg.param_dtype),
+         "b_f": jnp.full((d,), 3.0, cfg.param_dtype),
+         "gnorm": NN.init_norm(d, cfg.param_dtype),
+         "ln2": NN.init_norm(d, cfg.param_dtype)}
+    mlp_p, mlp_s = NN.init_mlp(ks[4], d, ff, cfg, rules)
+    p["mlp"] = mlp_p
+    s = {"ln": rules.vec(), "wi": rules.col(d, d), "wf": rules.col(d, d),
+         "wz": rules.col(d, d), "wo": rules.col(d, d), "b_i": rules.vec(),
+         "b_f": rules.vec(), "gnorm": rules.vec(), "ln2": rules.vec(),
+         "mlp": mlp_s}
+    return p, s
+
+
+def slstm_fwd(p, x, cfg: ModelConfig, *, cache=None, decode=False):
+    """cache = {'c': (B,d) fp32, 'n': (B,d) fp32}."""
+    b, s, d = x.shape
+    dt = x.dtype
+    hx = NN.rms_norm(x, p["ln"], cfg.norm_eps)
+    i = jax.nn.sigmoid(hx @ p["wi"].astype(dt) + p["b_i"].astype(dt))
+    f = jax.nn.sigmoid(hx @ p["wf"].astype(dt) + p["b_f"].astype(dt))
+    z = jnp.tanh(hx @ p["wz"].astype(dt))
+    o = jax.nn.sigmoid(hx @ p["wo"].astype(dt))
+    if decode:
+        assert s == 1
+        h, (c, n) = slstm_decode_step(i[:, 0], f[:, 0], z[:, 0], o[:, 0],
+                                      (cache["c"], cache["n"]))
+        h = h[:, None]
+    else:
+        c0 = cache["c"] if cache is not None else None
+        n0 = cache["n"] if cache is not None else None
+        h, (c, n) = slstm_scan(i, f, z, o, c0, n0)
+    h = NN.rms_norm(h, p["gnorm"], cfg.norm_eps)
+    x = x + h
+    hx = NN.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + NN.mlp_fwd(p["mlp"], hx)
+    new_cache = {"c": c, "n": n} if cache is not None else None
+    return x, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# full model: periods of (slstm_every-1 mLSTM) + 1 sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _xl_counts(cfg: ModelConfig):
+    per = cfg.slstm_every
+    periods = cfg.num_layers // per
+    rem = cfg.num_layers - periods * per   # trailing mLSTM layers
+    return periods, per - 1, rem
+
+
+def init_xlstm(key, cfg: ModelConfig, rules: ShardingRules):
+    periods, m_per, rem = _xl_counts(cfg)
+    n_m = periods * m_per + rem
+    ks = jax.random.split(key, 5)
+    embed_p, embed_s = NN.init_embed(ks[0], cfg, rules)
+    mkeys = jax.random.split(ks[1], max(n_m, 1))
+    mp = jax.vmap(lambda k: init_mlstm_block(k, cfg, rules)[0])(mkeys)
+    _, ms = init_mlstm_block(ks[1], cfg, rules)
+    skeys = jax.random.split(ks[2], max(periods, 1))
+    sp = jax.vmap(lambda k: init_slstm_block(k, cfg, rules)[0])(skeys)
+    _, ss = init_slstm_block(ks[2], cfg, rules)
+    params = {"embed": embed_p, "mlstm": mp, "slstm": sp,
+              "final_norm": NN.init_norm(cfg.d_model, cfg.param_dtype),
+              "lm_head": NN._dense(ks[3], (cfg.padded_vocab, cfg.d_model),
+                                   cfg.param_dtype)}
+    specs = {"embed": embed_s, "mlstm": stack_layer_specs(ms, n_m),
+             "slstm": stack_layer_specs(ss, periods),
+             "final_norm": rules.vec(),
+             "lm_head": rules.embed(cfg.padded_vocab, cfg.d_model)}
+    return params, specs
+
+
+def xlstm_forward(params, cfg: ModelConfig, rules: ShardingRules, mesh, *,
+                  tokens, embeds=None, mode="causal", cache=None, pos=None):
+    assert embeds is None
+    x = NN.embed_fwd(params["embed"], tokens, cfg)
+    periods, m_per, rem = _xl_counts(cfg)
+    decode = mode == "decode"
+
+    mp = params["mlstm"]
+    mp_main = jax.tree.map(lambda v: v[: periods * m_per].reshape(
+        (periods, m_per) + v.shape[1:]), mp)
+    mp_rem = jax.tree.map(lambda v: v[periods * m_per :], mp)
+    cm_main = cm_rem = cs = None
+    if cache is not None:
+        cm_main = jax.tree.map(lambda v: v[: periods * m_per].reshape(
+            (periods, m_per) + v.shape[1:]), cache["mlstm"])
+        cm_rem = jax.tree.map(lambda v: v[periods * m_per :], cache["mlstm"])
+        cs = cache["slstm"]
+
+    def m_step(carry, xs):
+        pl, cl = xs
+        y, ncl = mlstm_fwd(pl, carry, cfg, cache=cl, decode=decode)
+        return y, ncl
+
+    def period_body(carry, xs):
+        pm, ps, cm, csl = xs
+        if cache is None:
+            y, _ = jax.lax.scan(lambda c, pl: m_step(c, (pl, None)), carry, pm)
+            ncm = None
+        else:
+            y, ncm = jax.lax.scan(m_step, carry, (pm, cm))
+        y, ncs = slstm_fwd(ps, y, cfg, cache=csl, decode=decode)
+        return y, (ncm, ncs)
+
+    body = _remat(period_body, cfg)
+    at = lambda t, i: jax.tree.map(lambda v: v[i], t)
+    if not cfg.scan_layers:  # unrolled (roofline depth-pair lowerings)
+        ncms, ncss = [], []
+        for i in range(periods):
+            cm = at(cm_main, i) if cache is not None else None
+            for j in range(m_per):
+                x, ncl = mlstm_fwd(at(at(mp_main, i), j), x, cfg, cache=(
+                    at(cm, j) if cm is not None else None), decode=decode)
+                if cache is not None:
+                    ncms.append(ncl)
+            x, ncsl = slstm_fwd(at(params["slstm"], i), x, cfg, cache=(
+                at(cs, i) if cache is not None else None), decode=decode)
+            if cache is not None:
+                ncss.append(ncsl)
+        for j in range(rem):
+            cl = at(cm_rem, j) if cache is not None else None
+            x, ncl = mlstm_fwd(at(mp_rem, j), x, cfg, cache=cl, decode=decode)
+            if cache is not None:
+                ncms.append(ncl)
+        ncm = ncs = None
+        if cache is not None:
+            ncm = jax.tree.map(lambda *v: jnp.stack(v, 0), *ncms)
+            ncs = jax.tree.map(lambda *v: jnp.stack(v, 0), *ncss) if ncss \
+                else jax.tree.map(lambda v: v[:0], cs)
+    elif periods:
+        if cache is None:
+            x, _ = jax.lax.scan(
+                lambda c, xs: body(c, (xs[0], xs[1], None, None)), x,
+                (mp_main, params["slstm"]))
+            ncm = ncs = None
+        else:
+            x, (ncm, ncs) = jax.lax.scan(
+                body, x, (mp_main, params["slstm"], cm_main, cs))
+            ncm = jax.tree.map(
+                lambda v: v.reshape((periods * m_per,) + v.shape[2:]), ncm)
+    else:
+        ncm = cache["mlstm"] if cache is not None else None
+        ncs = cache["slstm"] if cache is not None else None
+        ncm = jax.tree.map(lambda v: v[:0], ncm) if ncm is not None else None
+    if cfg.scan_layers and rem:
+        if cache is None:
+            x, _ = jax.lax.scan(lambda c, pl: m_step(c, (pl, None)), x, mp_rem)
+        else:
+            x, ncr = jax.lax.scan(m_step, x, (mp_rem, cm_rem))
+            ncm = jax.tree.map(lambda a, r: jnp.concatenate([a, r], 0),
+                               ncm, ncr) if ncm is not None else ncr
+
+    x = NN.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = NN.unembed_fwd({"table": params["lm_head"]}, x, cfg)
+    ncache = None
+    if cache is not None:
+        ncache = {"mlstm": ncm, "slstm": ncs}
+    return logits, ncache, dict(AUX0)
+
+
+def init_xlstm_cache(cfg: ModelConfig, batch: int, max_len: int):
+    periods, m_per, rem = _xl_counts(cfg)
+    n_m = periods * m_per + rem
+    m_one = init_mlstm_cache(cfg, batch)
+    s_one = init_slstm_cache(cfg, batch)
+    return {
+        "mlstm": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (n_m,) + v.shape), m_one),
+        "slstm": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (periods,) + v.shape), s_one),
+    }
+
+
+def xlstm_cache_specs(cfg: ModelConfig, rules: ShardingRules, batch: int):
+    b, _ = rules.decode_layout(batch, False)
+    return {
+        "mlstm": {"conv": P(None, b, None, None),
+                  "state": P(None, b, None, None, None)},
+        "slstm": {"c": P(None, b, None), "n": P(None, b, None)},
+    }

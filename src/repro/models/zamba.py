@@ -1,0 +1,287 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + a shared attention block.
+
+Layout (zamba2-1.2b: 38 mamba layers, ``attn_every=6``): after every 6th
+mamba layer the **shared** transformer block (one set of weights, fresh
+activations/KV per invocation) runs — 6 invocations + 2 trailing mamba
+layers. The model scans over *periods* (6 stacked mamba + 1 shared-attn
+call) so compile size stays O(1) in depth while keeping the heterogeneous
+pattern exact (DESIGN.md §5 extrapolates rooflines per period).
+
+Simplification vs. the released checkpoint (DESIGN.md §Arch-applicability):
+Zamba2 concatenates the original embeddings onto the shared-block input and
+applies per-invocation LoRA; here the shared block is a standard GQA+MLP
+block on the hidden state. Structure, state sizes and FLOP shape per
+invocation match.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as NN
+from repro.models.common import ModelConfig, ShardingRules, stack_layer_specs
+from repro.models.recurrent import (
+    causal_depthwise_conv, chunked_gla, gla_decode_step)
+from repro.models.transformer import AUX_ZERO, _remat
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _mamba_dims(cfg: ModelConfig):
+    d_in = cfg.d_inner                       # expand * d_model
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    p = d_in // h                            # value head dim
+    conv_ch = d_in + 2 * n                   # x, B, C go through the conv
+    d_proj = 2 * d_in + 2 * n + h            # z, x, B, C, dt
+    return d_in, n, h, p, conv_ch, d_proj
+
+
+def init_mamba_block(key, cfg: ModelConfig, rules: ShardingRules):
+    d = cfg.d_model
+    d_in, n, h, pdim, conv_ch, d_proj = _mamba_dims(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln": NN.init_norm(d, cfg.param_dtype),
+        "in_proj": NN._dense(ks[0], (d, d_proj), cfg.param_dtype),
+        "conv_w": NN._dense(ks[1], (cfg.ssm_conv, conv_ch), cfg.param_dtype,
+                            scale=0.5),
+        "A_log": jnp.zeros((h,), cfg.param_dtype),       # A = -exp(A_log)
+        "D": jnp.ones((h,), cfg.param_dtype),
+        "dt_bias": jnp.full((h,), -1.0, cfg.param_dtype),
+        "norm": NN.init_norm(d_in, cfg.param_dtype),
+        "out_proj": NN._dense(ks[2], (d_in, d), cfg.param_dtype),
+    }
+    s = {
+        "ln": rules.vec(), "in_proj": rules.col(d, d_proj),
+        "conv_w": P(None, None), "A_log": rules.vec(), "D": rules.vec(),
+        "dt_bias": rules.vec(), "norm": rules.vec(),
+        "out_proj": rules.row(d_in, d),
+    }
+    return p, s
+
+
+def _mamba_split(zxbcdt, cfg: ModelConfig):
+    d_in, n, h, pdim, conv_ch, _ = _mamba_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_ch]
+    dt = zxbcdt[..., d_in + conv_ch :]
+    return z, xbc, dt
+
+
+def mamba_fwd(p, x: jax.Array, cfg: ModelConfig, *, cache=None, pos=None,
+              decode: bool = False):
+    """Mamba2 block. cache = {'conv': (B,K-1,CC), 'ssm': (B,H,N,P) fp32}."""
+    b, s, d = x.shape
+    d_in, n, h, pdim, conv_ch, _ = _mamba_dims(cfg)
+    dt_ = x.dtype
+    hx = NN.rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", hx, p["in_proj"].astype(dt_))
+    z, xbc, dtp = _mamba_split(zxbcdt, cfg)
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = causal_depthwise_conv(xbc, p["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :d_in]
+    bmat = xbc[..., d_in : d_in + n]                 # (B,S,N) shared groups=1
+    cmat = xbc[..., d_in + n :]
+
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))    # (B,S,H)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt     # <= 0
+    v = xin.reshape(b, s, h, pdim)
+    k = bmat[:, :, None, :] * dt[..., None].astype(dt_)       # fold Δ into k
+    k = jnp.broadcast_to(k, (b, s, h, n)).astype(dt_)
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, h, n)).astype(dt_)
+
+    if decode:
+        assert s == 1
+        y, new_ssm = gla_decode_step(
+            q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], cache["ssm"])
+        y = y[:, None]
+    else:
+        init = cache["ssm"] if cache is not None else None
+        y, new_ssm = chunked_gla(q, k, v, log_a, chunk=min(cfg.ssm_chunk, s),
+                                 initial_state=init, unroll=cfg.time_unroll)
+    y = y + v * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = NN.rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_ssm}
+    return x + out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    d_in, n, h, pdim, conv_ch, _ = _mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cfg.dtype),
+            "ssm": jnp.zeros((batch, h, n, pdim), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# hybrid model
+# ---------------------------------------------------------------------------
+
+
+def _period_counts(cfg: ModelConfig):
+    periods = cfg.num_layers // cfg.attn_every
+    rem = cfg.num_layers - periods * cfg.attn_every
+    return periods, rem
+
+
+def init_hybrid(key, cfg: ModelConfig, rules: ShardingRules):
+    from repro.models.transformer import init_block
+    ks = jax.random.split(key, 6)
+    embed_p, embed_s = NN.init_embed(ks[0], cfg, rules)
+    mkeys = jax.random.split(ks[1], cfg.num_layers)
+    mp = jax.vmap(lambda k: init_mamba_block(k, cfg, rules)[0])(mkeys)
+    _, ms = init_mamba_block(ks[1], cfg, rules)
+    shared_p, shared_s = init_block(ks[2], cfg, rules)
+    params = {"embed": embed_p, "mamba": mp, "shared": shared_p,
+              "final_norm": NN.init_norm(cfg.d_model, cfg.param_dtype),
+              "lm_head": NN._dense(ks[3], (cfg.padded_vocab, cfg.d_model),
+                                   cfg.param_dtype)}
+    specs = {"embed": embed_s,
+             "mamba": stack_layer_specs(ms, cfg.num_layers),
+             "shared": shared_s, "final_norm": rules.vec(),
+             "lm_head": rules.embed(cfg.padded_vocab, cfg.d_model)}
+    return params, specs
+
+
+def hybrid_forward(params, cfg: ModelConfig, rules: ShardingRules, mesh, *,
+                   tokens, embeds=None, mode="causal", cache=None, pos=None):
+    """Period-scanned hybrid forward. Returns (logits, new_cache, aux)."""
+    assert embeds is None
+    x = NN.embed_fwd(params["embed"], tokens, cfg)
+    b, s = x.shape[:2]
+    periods, rem = _period_counts(cfg)
+    per = cfg.attn_every
+    decode = mode == "decode"
+
+    positions = jnp.arange(s) + (pos if decode else 0)
+    rope = NN.rope_tables(positions, cfg.hd, cfg.rope_theta)
+
+    # split stacked mamba params into (periods, per, ...) + remainder
+    mp = params["mamba"]
+    mp_main = jax.tree.map(lambda v: v[: periods * per].reshape(
+        (periods, per) + v.shape[1:]), mp)
+    mp_rem = jax.tree.map(lambda v: v[periods * per :], mp)
+
+    c_main = c_rem = c_attn = None
+    if cache is not None:
+        c_main = jax.tree.map(lambda v: v[: periods * per].reshape(
+            (periods, per) + v.shape[1:]), cache["mamba"])
+        c_rem = jax.tree.map(lambda v: v[periods * per :], cache["mamba"])
+        c_attn = cache["attn"]  # stacked (periods, ...)
+
+    from repro.models.transformer import _block_fwd
+
+    def mamba_step(carry, xs):
+        pl, cl = xs
+        y, ncl = mamba_fwd(pl, carry, cfg, cache=cl, pos=pos, decode=decode)
+        return y, ncl
+
+    def period_body(carry, xs):
+        pmb, cmb, cat = xs
+        if cache is None:
+            y, _ = jax.lax.scan(lambda c, pl: mamba_step(c, (pl, None)),
+                                carry, pmb)
+            ncm = None
+        else:
+            y, ncm = jax.lax.scan(mamba_step, carry, (pmb, cmb))
+        y, ncat, aux = _block_fwd(params["shared"], y, cfg, rules, mesh,
+                                  rope=rope, mode=mode, cache=cat, pos=pos)
+        return y, (ncm, ncat, aux)
+
+    body = _remat(period_body, cfg)
+    at = lambda t, i: jax.tree.map(lambda v: v[i], t)
+
+    if not cfg.scan_layers:  # unrolled (roofline depth-pair lowerings)
+        aux = dict(AUX_ZERO)
+        ncms, ncats = [], []
+        for i in range(periods):
+            cmb = at(c_main, i) if cache is not None else None
+            cat = at(c_attn, i) if cache is not None else None
+            yncm = []
+            for j in range(per):
+                x, ncl = mamba_fwd(at(at(mp_main, i), j), x, cfg, cache=(
+                    at(cmb, j) if cmb is not None else None), pos=pos,
+                    decode=decode)
+                yncm.append(ncl)
+            x, ncat, a = _block_fwd(params["shared"], x, cfg, rules, mesh,
+                                    rope=rope, mode=mode, cache=cat, pos=pos)
+            aux = {k: aux[k] + a[k] for k in aux}
+            if cache is not None:
+                ncms.extend(yncm)
+                ncats.append(ncat)
+        for j in range(rem):
+            cl = at(c_rem, j) if cache is not None else None
+            x, ncl = mamba_fwd(at(mp_rem, j), x, cfg, cache=cl, pos=pos,
+                               decode=decode)
+            if cache is not None:
+                ncms.append(ncl)
+        ncache = None
+        if cache is not None:
+            ncache = {
+                "mamba": jax.tree.map(lambda *v: jnp.stack(v, 0), *ncms)
+                if ncms else jax.tree.map(lambda v: v[:0], cache["mamba"]),
+                "attn": jax.tree.map(lambda *v: jnp.stack(v, 0), *ncats)
+                if ncats else c_attn,
+            }
+    elif cache is None:
+        if periods:
+            x, (_, _, auxs) = jax.lax.scan(
+                lambda c, xs: body(c, (xs[0], None, None)), x, (mp_main,))
+            aux = jax.tree.map(jnp.sum, auxs)
+        else:
+            aux = dict(AUX_ZERO)
+        ncache = None
+        if rem:
+            x, _ = jax.lax.scan(lambda c, pl: mamba_step(c, (pl, None)),
+                                x, mp_rem)
+    else:
+        if periods:
+            x, (ncm, ncat, auxs) = jax.lax.scan(
+                body, x, (mp_main, c_main, c_attn))
+            aux = jax.tree.map(jnp.sum, auxs)
+            ncm = jax.tree.map(
+                lambda v: v.reshape((periods * per,) + v.shape[2:]), ncm)
+        else:
+            aux = dict(AUX_ZERO)
+            ncm, ncat = jax.tree.map(lambda v: v[:0], c_rem), c_attn
+        if rem:
+            x, ncr = jax.lax.scan(mamba_step, x, (mp_rem, c_rem))
+            ncm = jax.tree.map(lambda a, r: jnp.concatenate([a, r], 0), ncm, ncr)
+        ncache = {"mamba": ncm, "attn": ncat}
+    x = NN.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = NN.unembed_fwd({"table": params["lm_head"]}, x, cfg)
+    return logits, (ncache if cache is not None else None), aux
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, max_len: int):
+    periods, _ = _period_counts(cfg)
+    mamba_one = init_mamba_cache(cfg, batch)
+    mamba = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape),
+        mamba_one)
+    attn_one = NN.init_attn_cache(cfg, batch, max_len)
+    attn = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (periods,) + v.shape), attn_one)
+    return {"mamba": mamba, "attn": attn}
+
+
+def hybrid_cache_specs(cfg: ModelConfig, rules: ShardingRules, batch: int):
+    b, _ = rules.decode_layout(batch, False)
+    mamba = {"conv": P(None, b, None, None), "ssm": P(None, b, None, None, None)}
+    attn_one = NN.attn_cache_specs(cfg, rules, batch)
+    attn = jax.tree.map(lambda sp: P(None, *sp), attn_one,
+                        is_leaf=lambda v: isinstance(v, P))
+    return {"mamba": mamba, "attn": attn}

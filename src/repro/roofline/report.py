@@ -1,0 +1,113 @@
+"""Render results/dryrun.json into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.roofline.analysis import HBM_PER_CHIP
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def dryrun_table(data: dict) -> str:
+    rows = ["| arch | shape | mesh | fits | GiB/dev (TPU-adj) | %HBM | "
+            "colls/step (once-counted) | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch, shapes in data.items():
+        for shape in SHAPE_ORDER:
+            rec = shapes.get(shape)
+            if rec is None:
+                continue
+            if "skipped" in rec:
+                rows.append(f"| {arch} | {shape} | — | SKIP | — | — | "
+                            f"{rec['skipped'].split('(')[0].strip()} | — |")
+                continue
+            for mesh in ("single", "multi"):
+                r = rec.get(mesh)
+                if r is None:
+                    continue
+                if not r.get("ok"):
+                    rows.append(f"| {arch} | {shape} | {mesh} | FAIL | — | — "
+                                f"| {r.get('error','')[:60]} | — |")
+                    continue
+                mem = r["memory"]
+                peak = mem.get("peak_adjusted", mem["peak_bytes"])
+                cc = r["collectives_once"]["counts"]
+                cstr = " ".join(f"{k.split('-')[-1] if '-' in k else k}:"
+                                f"{v}" for k, v in sorted(cc.items()))
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | "
+                    f"{'Y' if peak <= HBM_PER_CHIP else 'OVER'}"
+                    f" | {fmt_bytes(peak)} | "
+                    f"{100*peak/HBM_PER_CHIP:.0f}% | {cstr} | "
+                    f"{r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(data: dict) -> str:
+    rows = ["| arch | shape | compute ms | memory ms (xla / flash-adj) | "
+            "collective ms | dominant | MODEL_FLOPS/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch, shapes in data.items():
+        for shape in SHAPE_ORDER:
+            rec = shapes.get(shape, {})
+            r = rec.get("roofline")
+            if not r or "terms" not in r:
+                continue
+            t, tf = r["terms"], r["terms_flash"]
+            # roofline fraction: useful-compute time / achievable bound
+            frac = (r["model_flops"] / r["chips"] / 197e12) / tf["bound_s"]
+            rows.append(
+                f"| {arch} | {shape} | {fmt_ms(t['compute_s'])} | "
+                f"{fmt_ms(t['memory_s'])} / {fmt_ms(tf['memory_s'])} | "
+                f"{fmt_ms(t['collective_s'])} | {tf['dominant']} | "
+                f"{100*r['useful_ratio']:.0f}% | {100*frac:.0f}% |")
+    return "\n".join(rows)
+
+
+def bottleneck_notes(data: dict) -> str:
+    notes = []
+    for arch, shapes in data.items():
+        for shape in SHAPE_ORDER:
+            r = shapes.get(shape, {}).get("roofline")
+            if not r or "terms_flash" not in r:
+                continue
+            dom = r["terms_flash"]["dominant"]
+            hint = {
+                "collective": "reduce TP degree / shard params instead of "
+                              "activations (FSDP), overlap collectives",
+                "memory": "fuse attention (Pallas flash), cut fp32 "
+                          "materializations, seq-shard activations",
+                "compute": "at the MXU bound — only algorithmic wins left "
+                           "(MoE sparsity, shorter seq, fewer layers)",
+            }[dom]
+            notes.append(f"- **{arch} × {shape}** — {dom}-bound: {hint}.")
+    return "\n".join(notes)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    with open(path) as f:
+        data = json.load(f)
+    print("### Dry-run matrix\n")
+    print(dryrun_table(data))
+    print("\n### Roofline (single-pod, per step)\n")
+    print(roofline_table(data))
+    print("\n### Dominant-term notes\n")
+    print(bottleneck_notes(data))
+
+
+if __name__ == "__main__":
+    main()

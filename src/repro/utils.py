@@ -1,0 +1,74 @@
+"""Small shared utilities: padding, pow2 math, platform detection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.cache
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    """Pallas kernels run in interpret mode off-TPU (this container is CPU)."""
+    return not on_tpu()
+
+
+def next_pow2(n: int) -> int:
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(n: int, m: int) -> int:
+    return ceil_div(n, m) * m
+
+
+def pad_to(x: jax.Array, n: int, fill) -> jax.Array:
+    """Pad 1-D array x up to length n with `fill` (no-op if already n)."""
+    if x.shape[0] == n:
+        return x
+    assert x.shape[0] < n, (x.shape, n)
+    return jnp.concatenate(
+        [x, jnp.full((n - x.shape[0],) + x.shape[1:], fill, dtype=x.dtype)]
+    )
+
+
+def safe_constrain(x, mesh, spec):
+    """with_sharding_constraint that no-ops inside manual (shard_map)
+    regions, where the full-mesh NamedSharding is rejected — e.g. the
+    pod-compressed gradient path wraps the whole model in a pod-manual
+    shard_map; the inner TP constraints become hints we can drop there."""
+    from jax.sharding import NamedSharding
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and any(
+                "Manual" in str(t) for t in getattr(am, "axis_types", ())):
+            return x
+    except Exception:  # noqa: BLE001 — older jax: fall through to try/except
+        pass
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """Version-compat shard_map (jax>=0.8 moved it to jax.shard_map)."""
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=check_rep)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "dtype")
+    )

@@ -1,0 +1,94 @@
+"""NumPy relational-algebra oracle for the property tests.
+
+Plain-Python row semantics — the ground truth the JAX operators must match
+(same contract Cylon verifies against Spark output counts, §IV-A).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rows(table_dict):
+    names = sorted(table_dict)
+    cols = [np.asarray(table_dict[n]) for n in names]
+    return names, list(zip(*[c.tolist() for c in cols])) if names else []
+
+
+def select_oracle(table, pred):
+    names, rs = rows(table)
+    out = [r for r in rs if pred(dict(zip(names, r)))]
+    return sorted(out)
+
+
+def distinct_oracle(table):
+    _, rs = rows(table)
+    return sorted(set(rs))
+
+
+def union_oracle(a, b):
+    _, ra = rows(a)
+    _, rb = rows(b)
+    return sorted(set(ra) | set(rb))
+
+
+def intersect_oracle(a, b):
+    _, ra = rows(a)
+    _, rb = rows(b)
+    return sorted(set(ra) & set(rb))
+
+
+def difference_oracle(a, b, mode="symmetric"):
+    _, ra = rows(a)
+    _, rb = rows(b)
+    if mode == "symmetric":
+        return sorted(set(ra) ^ set(rb))
+    return sorted(set(ra) - set(rb))
+
+
+def join_oracle(left, right, on, how="inner", suffix="_r"):
+    """Returns sorted list of joined row tuples, columns sorted by name."""
+    lnames = sorted(left)
+    rnames = sorted(right)
+    out_names = lnames + [n + suffix if n in left else n
+                          for n in rnames if n not in on or True]
+    # build output column order: left cols + right cols (renamed on clash)
+    rmap = {n: (n + suffix if n in left else n) for n in rnames}
+    all_names = sorted(lnames + [rmap[n] for n in rnames])
+
+    lrows = list(zip(*[np.asarray(left[n]).tolist() for n in lnames])) \
+        if lnames else []
+    rrows = list(zip(*[np.asarray(right[n]).tolist() for n in rnames])) \
+        if rnames else []
+    lkey = [tuple(r[lnames.index(k)] for k in on) for r in lrows]
+    rkey = [tuple(r[rnames.index(k)] for k in on) for r in rrows]
+
+    out = []
+    l_matched = [False] * len(lrows)
+    r_matched = [False] * len(rrows)
+    for i, lr in enumerate(lrows):
+        for j, rr in enumerate(rrows):
+            if lkey[i] == rkey[j]:
+                l_matched[i] = r_matched[j] = True
+                d = dict(zip(lnames, lr))
+                d.update({rmap[n]: v for n, v in zip(rnames, rr)})
+                out.append(tuple(d[n] for n in all_names))
+    if how in ("left", "full"):
+        for i, lr in enumerate(lrows):
+            if not l_matched[i]:
+                d = {n: 0 for n in all_names}
+                d.update(dict(zip(lnames, lr)))
+                out.append(tuple(d[n] for n in all_names))
+    if how in ("right", "full"):
+        for j, rr in enumerate(rrows):
+            if not r_matched[j]:
+                d = {n: 0 for n in all_names}
+                d.update({rmap[n]: v for n, v in zip(rnames, rr)})
+                out.append(tuple(d[n] for n in all_names))
+    return all_names, sorted(out)
+
+
+def table_rows_sorted(t):
+    """Valid rows of a repro Table as sorted tuples (cols sorted by name)."""
+    d = t.to_numpy()
+    names = sorted(d)
+    return sorted(zip(*[d[n].tolist() for n in names])) if names else []

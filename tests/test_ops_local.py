@@ -1,0 +1,150 @@
+"""Property tests: every local relational operator vs the NumPy oracle
+(Cylon Table I semantics — select/project/join x4 x2 algos/union/
+intersect/difference/sort/distinct)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops_local as L
+from repro.core.table import Table
+
+from oracle import (
+    difference_oracle, distinct_oracle, intersect_oracle, join_oracle,
+    select_oracle, table_rows_sorted, union_oracle)
+
+keys = st.integers(0, 8)  # small key range -> many duplicates/matches
+
+
+@st.composite
+def kv_table(draw, max_rows=14):
+    n = draw(st.integers(0, max_rows))
+    return {
+        "k": np.asarray(draw(st.lists(keys, min_size=n, max_size=n)), np.int32),
+        "v": np.asarray(draw(st.lists(st.integers(-50, 50), min_size=n,
+                                      max_size=n)), np.int32),
+    }
+
+
+def as_table(cols, pad=3):
+    return Table.from_arrays(cols, capacity=len(cols["k"]) + pad)
+
+
+# --- select / project -------------------------------------------------------
+
+
+@given(kv_table(), st.integers(0, 8))
+def test_select(cols, thresh):
+    t = as_table(cols)
+    out = L.select(t, lambda c: c["k"] < thresh)
+    assert table_rows_sorted(out) == \
+        select_oracle(cols, lambda r: r["k"] < thresh)
+
+
+@given(kv_table())
+def test_project(cols):
+    t = as_table(cols)
+    out = L.project(t, ["k"])
+    assert out.column_names == ["k"]
+    assert sorted(out.to_numpy()["k"].tolist()) == sorted(cols["k"].tolist())
+
+
+# --- sort / distinct ---------------------------------------------------------
+
+
+@given(kv_table())
+def test_sort_by(cols):
+    t = as_table(cols)
+    out = L.sort_by(t, "k")
+    got = out.to_numpy()["k"]
+    np.testing.assert_array_equal(got, np.sort(cols["k"], kind="stable"))
+
+
+@given(kv_table())
+def test_sort_bitonic_matches_xla(cols):
+    t = as_table(cols)
+    a = L.sort_by(t, "k", algorithm="bitonic").to_numpy()["k"]
+    b = L.sort_by(t, "k", algorithm="xla").to_numpy()["k"]
+    np.testing.assert_array_equal(a, b)
+
+
+@given(kv_table())
+def test_distinct(cols):
+    t = as_table(cols)
+    assert table_rows_sorted(L.distinct(t)) == distinct_oracle(cols)
+
+
+# --- set operators -----------------------------------------------------------
+
+
+@given(kv_table(), kv_table())
+def test_union(a, b):
+    assert table_rows_sorted(L.union(as_table(a), as_table(b))) == \
+        union_oracle(a, b)
+
+
+@given(kv_table(), kv_table())
+def test_intersect(a, b):
+    assert table_rows_sorted(L.intersect(as_table(a), as_table(b))) == \
+        intersect_oracle(a, b)
+
+
+@given(kv_table(), kv_table())
+def test_difference_symmetric(a, b):
+    assert table_rows_sorted(L.difference(as_table(a), as_table(b))) == \
+        difference_oracle(a, b, "symmetric")
+
+
+@given(kv_table(), kv_table())
+def test_difference_left(a, b):
+    assert table_rows_sorted(
+        L.difference(as_table(a), as_table(b), mode="left")) == \
+        difference_oracle(a, b, "left")
+
+
+# --- join: 4 semantics x 2 algorithms ----------------------------------------
+
+
+@pytest.mark.parametrize("how", ["inner", "left", "right", "full"])
+@pytest.mark.parametrize("algorithm", ["sort", "hash"])
+@settings(max_examples=20)
+@given(left=kv_table(max_rows=10), right=kv_table(max_rows=10))
+def test_join(how, algorithm, left, right):
+    lt = as_table(left)
+    rt = Table.from_arrays({"k": right["k"], "w": right["v"]},
+                           capacity=len(right["k"]) + 2)
+    out = L.join(lt, rt, "k", how=how, algorithm=algorithm,
+                 out_capacity=(len(left["k"]) + 1) * (len(right["k"]) + 1)
+                 + len(left["k"]) + len(right["k"]) + 2)
+    _, expect = join_oracle(left, {"k": right["k"], "w": right["v"]},
+                            ["k"], how=how)
+    assert table_rows_sorted(out) == expect
+
+
+@given(left=kv_table(max_rows=10), right=kv_table(max_rows=10))
+def test_join_multikey_hash(left, right):
+    """Multi-column join (hash algorithm only, as in Cylon)."""
+    lt = as_table(left)
+    rt = Table.from_arrays({"k": right["k"], "v": right["v"]},
+                           capacity=len(right["k"]) + 2)
+    out = L.join(lt, rt, ["k", "v"], how="inner", algorithm="hash",
+                 out_capacity=(len(left["k"]) + 1) * (len(right["k"]) + 1))
+    _, expect = join_oracle(left, right, ["k", "v"], how="inner")
+    assert table_rows_sorted(out) == expect
+
+
+def test_join_overflow_truncates_to_capacity():
+    """out_capacity smaller than the true result: valid rows kept, count
+    clamped (Cylon's explicit memory-budget failure mode)."""
+    a = Table.from_arrays({"k": np.zeros(4, np.int32)})
+    b = Table.from_arrays({"k": np.zeros(4, np.int32), "w": np.arange(4, dtype=np.int32)})
+    out = L.join(a, b, "k", out_capacity=5)
+    assert int(out.row_count) == 5
+    assert out.capacity == 5
+
+
+@given(kv_table())
+def test_head(cols):
+    t = as_table(cols)
+    h = L.head(t, 3)
+    assert int(h.row_count) == min(3, len(cols["k"]))

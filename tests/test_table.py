@@ -1,0 +1,74 @@
+"""Table invariants: construction, gather, concat, N-D columns (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.table import Table, concat_tables
+
+ints = st.integers(-1000, 1000)
+
+
+@st.composite
+def table_data(draw, max_rows=20, with_2d=False):
+    n = draw(st.integers(0, max_rows))
+    cols = {"k": np.asarray(draw(st.lists(ints, min_size=n, max_size=n)),
+                            np.int32)}
+    cols["v"] = np.asarray(
+        draw(st.lists(st.floats(-10, 10, width=32), min_size=n, max_size=n)),
+        np.float32)
+    if with_2d:
+        cols["tok"] = np.arange(n * 3, dtype=np.int32).reshape(n, 3)
+    return cols
+
+
+@given(table_data())
+def test_from_arrays_roundtrip(cols):
+    t = Table.from_arrays(cols)
+    out = t.to_numpy()
+    for k in cols:
+        np.testing.assert_array_equal(out[k], cols[k])
+
+
+@given(table_data(), st.integers(1, 10))
+def test_capacity_padding(cols, extra):
+    n = len(cols["k"])
+    t = Table.from_arrays(cols, capacity=n + extra)
+    assert t.capacity == n + extra
+    assert int(t.row_count) == n
+    out = t.to_numpy()
+    np.testing.assert_array_equal(out["k"], cols["k"])
+    assert bool(np.all(np.asarray(t.valid_mask())[:n]))
+    assert not np.any(np.asarray(t.valid_mask())[n:])
+
+
+@given(table_data(max_rows=10), table_data(max_rows=10))
+def test_concat_preserves_rows(a_cols, b_cols):
+    a = Table.from_arrays(a_cols, capacity=len(a_cols["k"]) + 3)
+    b = Table.from_arrays(b_cols, capacity=len(b_cols["k"]) + 2)
+    c = concat_tables(a, b)
+    assert int(c.row_count) == int(a.row_count) + int(b.row_count)
+    out = c.to_numpy()
+    np.testing.assert_array_equal(
+        out["k"], np.concatenate([a_cols["k"], b_cols["k"]]))
+
+
+def test_nd_columns():
+    cols = {"id": np.arange(4, dtype=np.int32),
+            "tok": np.arange(12, dtype=np.int32).reshape(4, 3)}
+    t = Table.from_arrays(cols, capacity=6)
+    g = t.gather(jnp.asarray([2, 0, -1, 1, -1, -1]), 2)
+    out = np.asarray(g.columns["tok"])
+    np.testing.assert_array_equal(out[0], cols["tok"][2])
+    np.testing.assert_array_equal(out[1], cols["tok"][0])
+    np.testing.assert_array_equal(out[2], 0)  # -1 fills zeros
+
+    c = concat_tables(t, t)
+    assert int(c.row_count) == 8
+    np.testing.assert_array_equal(
+        c.to_numpy()["tok"], np.concatenate([cols["tok"], cols["tok"]]))
+
+
+def test_rename_and_project_names():
+    t = Table.from_arrays({"a": np.arange(3, dtype=np.int32)})
+    r = t.rename({"a": "b"})
+    assert r.column_names == ["b"]
