@@ -61,8 +61,10 @@ def bench_strong(total_rows: int = 200_000) -> Table:
 def main(quick: bool = False):
     rpw = 20_000 if quick else 50_000
     tot = 80_000 if quick else 200_000
-    bench_weak(rpw).emit()
-    bench_strong(tot).emit()
+    weak, strong = bench_weak(rpw), bench_strong(tot)
+    weak.emit()
+    strong.emit()
+    return [weak, strong]
 
 
 if __name__ == "__main__":

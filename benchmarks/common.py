@@ -45,3 +45,8 @@ class Table:
         for r in self.rows:
             print(",".join(
                 f"{v:.4g}" if isinstance(v, float) else str(v) for v in r))
+
+    def to_dict(self) -> dict:
+        """Machine-readable form for the --json trajectory output."""
+        return {"title": self.title, "columns": self.columns,
+                "rows": self.rows}

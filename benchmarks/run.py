@@ -1,31 +1,62 @@
 """Benchmark harness: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 
 Sections:
   Fig9/TableII engine comparison (bench_vs_baselines)
   Fig10 binding/dispatch overhead (bench_binding_overhead)
   kernels roofline (bench_kernels)
+  groupby strategies: shuffle vs two-phase (bench_groupby)
   Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
+
+--json writes every section's tables as machine-readable records (the
+BENCH_*.json perf-trajectory feed).
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes; CI smoke mode")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write results as JSON to PATH")
+    args = ap.parse_args()
+    quick = args.quick
+
     t0 = time.perf_counter()
-    from benchmarks import (bench_binding_overhead, bench_kernels,
-                            bench_scaling, bench_vs_baselines)
+    from benchmarks import (bench_binding_overhead, bench_groupby,
+                            bench_kernels, bench_scaling, bench_vs_baselines)
 
     print(f"# benchmark run (quick={quick})")
-    bench_vs_baselines.main(quick)
-    bench_binding_overhead.main(quick)
-    bench_kernels.main(quick)
-    bench_scaling.main(quick)
-    print(f"\n[done] total {time.perf_counter() - t0:.0f}s")
+    sections = [
+        ("vs_baselines", bench_vs_baselines.main),
+        ("binding_overhead", bench_binding_overhead.main),
+        ("kernels", bench_kernels.main),
+        ("groupby", bench_groupby.main),
+        ("scaling", bench_scaling.main),
+    ]
+    results: dict[str, list[dict]] = {}
+    for name, fn in sections:
+        tables = fn(quick)
+        if tables is None:
+            tables = []
+        elif not isinstance(tables, (list, tuple)):
+            tables = [tables]
+        results[name] = [t.to_dict() for t in tables]
+    elapsed = time.perf_counter() - t0
+
+    if args.json:
+        payload = {"quick": quick, "elapsed_seconds": elapsed,
+                   "sections": results}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
+        print(f"\n[json] wrote {args.json}")
+    print(f"\n[done] total {elapsed:.0f}s")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,12 @@ from repro.core.context import DistContext  # noqa: E402
 from repro.data.synthetic import random_table, zipf_table  # noqa: E402
 
 
+def ctx_project_sample(t):
+    """Keep the 1-D stat columns (tokens stay on their own pipeline path)."""
+    from repro.core import ops_local as L
+    return L.project(t, ["source", "quality"])
+
+
 def main():
     ctx = DistContext(axis_name="shuffle")
     print(f"workers: {ctx.num_shards}")
@@ -50,6 +56,39 @@ def main():
     # pleasingly-parallel select (no network, paper §II-B-1)
     sel = ctx.select(orders, lambda c: c["d0"] > 1.0)
     print(f"select d0>1: {int(sel.global_rows())} rows")
+
+    # distributed groupby: per-key stats, both aggregation strategies.
+    # two_phase shuffles <= cardinality partial rows per shard instead of
+    # every raw row, so its AllToAll buckets can be ~rows/cardinality smaller.
+    aggs = {"d0": ["mean", "var"], "d1": ["count", "min", "max"]}
+    g_sh, (st_sh,) = ctx.groupby(orders, "k", aggs, strategy="shuffle",
+                                 bucket_capacity=2048)
+    g_tp, (st_tp,) = ctx.groupby(orders, "k", aggs, strategy="two_phase",
+                                 bucket_capacity=640)
+    rows_sh = int(np.asarray(st_sh.received).sum())
+    rows_tp = int(np.asarray(st_tp.received).sum())
+    a, b = g_sh.to_table().to_numpy(), g_tp.to_table().to_numpy()
+    oa, ob = np.argsort(a["k"]), np.argsort(b["k"])
+    assert np.array_equal(a["k"][oa], b["k"][ob])
+    assert np.allclose(a["d0_mean"][oa], b["d0_mean"][ob], atol=1e-5)
+    assert np.array_equal(a["d1_count"][oa], b["d1_count"][ob])
+    print(f"distributed groupby: {int(g_tp.global_rows())} groups; "
+          f"shuffled rows {rows_sh} (shuffle) vs {rows_tp} (two-phase, "
+          f"{rows_sh / max(rows_tp, 1):.1f}x fewer)")
+
+    # quality-bucket statistics stage (data/pipeline.py) on LM samples
+    from repro.data.pipeline import SOURCE_STAT_AGGS
+    from repro.data.synthetic import lm_samples_table
+    samples = ctx.from_local_parts([
+        ctx_project_sample(lm_samples_table(512, 8, 1000, seed=3, shard=i))
+        for i in range(ctx.num_shards)])
+    stats, _ = ctx.groupby(samples, "source", SOURCE_STAT_AGGS,
+                           strategy="two_phase", bucket_capacity=64)
+    d = stats.to_table().to_numpy()
+    print("quality stats by source bucket:")
+    for i in np.argsort(d["source"]):
+        print(f"  source={d['source'][i]}: n={d['quality_count'][i]} "
+              f"mean={d['quality_mean'][i]:.3f} var={d['quality_var'][i]:.3f}")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,14 @@ def main():
     assert np.all(np.diff(ks) >= 0)
     print("sorted ok; head:", ks[:10])
 
+    # groupby: per-key statistics (sort -> segment -> reduce, ops_agg.py)
+    from repro.core import ops_agg as A
+    g = A.groupby(left, "k", {"d0": ["count", "mean", "var"]})
+    gd = g.to_numpy()
+    print(f"groupby: {int(g.row_count)} keys; "
+          f"k={gd['k'][0]} n={gd['d0_count'][0]} "
+          f"mean={gd['d0_mean'][0]:.3f} var={gd['d0_var'][0]:.3f}")
+
 
 if __name__ == "__main__":
     main()

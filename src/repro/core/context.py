@@ -247,6 +247,35 @@ class DistContext:
             x, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
         return self._run(("distinct", cb, seed), body, [a])
 
+    def groupby(self, t: DistTable, keys, aggs, *, strategy: str = "two_phase",
+                bucket_capacity=None, partial_capacity: int | None = None,
+                out_capacity: int | None = None, seed: int = 7):
+        """Distributed GroupBy (strategy='two_phase' | 'shuffle').
+
+        Two-phase (default, arXiv:2010.14596): per-shard partial aggregates
+        shuffle instead of raw rows — on low-cardinality keys pass a small
+        ``bucket_capacity`` (~cardinality x slack / shards) to shrink the
+        AllToAll wire volume accordingly. 'shuffle' moves every row.
+        """
+        from repro.core import ops_agg as A
+
+        keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
+        pairs = A.normalize_aggs(aggs)  # canonical form: the jit-cache key
+        cb = self._bucket_cap(t, bucket_capacity)
+
+        def body(x):
+            # pass the canonical pairs through; dist_groupby's own
+            # normalize_aggs is idempotent on them
+            return D.dist_groupby(
+                x, list(keys_t), pairs, axis_name=self.axis_name,
+                bucket_capacity=cb, strategy=strategy,
+                partial_capacity=partial_capacity, out_capacity=out_capacity,
+                seed=seed)
+
+        key = ("groupby", keys_t, pairs, strategy, cb, partial_capacity,
+               out_capacity, seed)
+        return self._run(key, body, [t])
+
     def sort(self, a: DistTable, by: str, *, bucket_capacity=None,
              samples_per_shard: int = 64):
         cb = self._bucket_cap(a, bucket_capacity, slack=4.0)

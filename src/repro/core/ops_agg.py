@@ -1,0 +1,236 @@
+"""Keyed aggregation (GroupBy) — the paper's missing operator family.
+
+Cylon's follow-up ("A Fast, Scalable, Universal Approach For Distributed
+Data Aggregations", arXiv:2010.14596) treats keyed aggregation as the
+workhorse of distributed data engineering. The local algorithm here is the
+sort-based path adapted to the compacted-front Table invariant:
+
+    sort-by-key  ->  segment-boundary detection  ->  segment reductions
+
+Exact multi-column keys throughout (the sort compares real key columns, as
+in ops_local's sort path); hashing appears only as the distributed
+pre-partitioner (ops_dist.dist_groupby). The segment reductions run on the
+Pallas one-hot kernel (kernels/segment_reduce.py) for the hot 1-D shapes
+and on XLA scatter-reduce otherwise — identical semantics.
+
+Aggregators: sum / count / min / max / mean / var / first. Every aggregator
+decomposes into *algebraic* partials (sum, sumsq, count, min, max, first)
+that combine associatively across shards — the paper's two-phase
+(partial-aggregate -> AllToAll -> final-combine) strategy falls out of the
+same machinery: ``groupby == finalize ∘ partial_groupby`` locally, and
+``finalize ∘ combine ∘ shuffle ∘ partial`` distributed.
+
+Output Table: one row per group (compacted to the front, ordered by key),
+columns = key columns + ``{col}_{agg}`` result columns.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops_local as L
+from repro.core.table import Table
+from repro.kernels import ops as kops
+
+AGG_OPS = ("sum", "count", "min", "max", "mean", "var", "first")
+
+# aggregator -> algebraic partials it needs (combine: sums add, min/max
+# re-reduce, first takes the earliest partial in global row order)
+_DECOMP = {
+    "sum": ("sum",),
+    "count": ("count",),
+    "min": ("min",),
+    "max": ("max",),
+    "mean": ("sum", "count"),
+    "var": ("sum", "sumsq", "count"),
+    "first": ("first",),
+}
+_COMBINE = {"sum": "sum", "sumsq": "sum", "count": "sum",
+            "min": "min", "max": "max", "first": "first"}
+
+
+def normalize_aggs(aggs) -> tuple[tuple[str, str], ...]:
+    """Accept {col: op | [ops]} or [(col, op), ...] -> ((col, op), ...)."""
+    if isinstance(aggs, dict):
+        pairs = []
+        for col, ops in aggs.items():
+            ops = [ops] if isinstance(ops, str) else list(ops)
+            pairs += [(col, op) for op in ops]
+    else:
+        pairs = [(c, o) for c, o in aggs]
+    for col, op in pairs:
+        assert op in AGG_OPS, (op, AGG_OPS)
+    return tuple(pairs)
+
+
+def _prim_name(col: str, prim: str) -> str:
+    """Internal partial-column name (count is group size, column-free)."""
+    return "__count" if prim == "count" else f"__{prim}__{col}"
+
+
+def _segments(table: Table, keys: Sequence[str]):
+    """Sort by keys -> (sorted table, seg_id (cap,) int32 [-1 invalid],
+    num_groups, starts (cap,) int32 row index of each group's first row)."""
+    if table.capacity == 0:
+        table = Table({k: jnp.zeros((1,) + v.shape[1:], v.dtype)
+                       for k, v in table.columns.items()}, table.row_count)
+    st = L.sort_by(table, list(keys))
+    cap = st.capacity
+    valid = st.valid_mask()
+    differs = jnp.zeros((cap,), bool)
+    for k in keys:
+        col = st.columns[k]
+        differs = differs | (col != jnp.roll(col, 1))
+    boundary = valid & (differs | (jnp.arange(cap) == 0))
+    seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+    seg = jnp.where(valid, seg, -1)
+    num_groups = jnp.sum(boundary).astype(jnp.int32)
+    # one boundary row per group: scatter its row index to slot seg[i]
+    starts = jnp.zeros((cap,), jnp.int32).at[
+        jnp.where(boundary, seg, cap)].set(jnp.arange(cap, dtype=jnp.int32),
+                                           mode="drop")
+    return st, seg, num_groups, starts
+
+
+def _first(col: jax.Array, starts: jax.Array, group_valid: jax.Array):
+    """Per-group value at the segment start (stable sort => first in input
+    order). Works for N-D payload columns."""
+    v = col[starts]
+    sel = group_valid.reshape((-1,) + (1,) * (col.ndim - 1))
+    return jnp.where(sel, v, jnp.zeros_like(v))
+
+
+def _reduce(col: jax.Array, seg: jax.Array, slots: int, prim: str,
+            group_valid: jax.Array, use_kernel):
+    """One algebraic partial over a (cap, ...) column -> (slots, ...)."""
+    if prim == "sumsq":
+        col = col.astype(jnp.float32) ** 2
+        prim = "sum"
+    out = kops.segment_reduce(col, seg, slots, prim, use_kernel=use_kernel)
+    # empty slots hold the op identity (e.g. +inf for min): zero them so
+    # rows past row_count stay benign garbage
+    sel = group_valid.reshape((-1,) + (1,) * (out.ndim - 1))
+    return jnp.where(sel, out, jnp.zeros_like(out))
+
+
+def _partial_columns(table: Table, keys: Sequence[str], pairs, *,
+                     out_capacity: int | None = None, use_kernel=None):
+    """Shared phase-1 machinery: per-group key values + algebraic partials.
+
+    Reductions run into ``out_capacity`` slots when given (groups past it
+    truncate, mirroring join's explicit memory-budget failure mode) — a
+    tight bound both shrinks the output table and keeps the segment count
+    within the Pallas kernel's VMEM budget on large inputs.
+    """
+    st, seg, num_groups, starts = _segments(table, keys)
+    cap = st.capacity
+    slots = cap if out_capacity is None else min(cap, out_capacity)
+    row_count = jnp.minimum(num_groups, slots)
+    group_valid = jnp.arange(slots) < row_count
+    starts = starts[:slots]
+
+    cols: dict[str, jax.Array] = {}
+    for k in keys:
+        cols[k] = _first(st.columns[k], starts, group_valid)
+    prims = {(c, p) for c, op in pairs for p in _DECOMP[op]}
+    for col, prim in sorted(prims, key=lambda cp: _prim_name(*cp)):
+        name = _prim_name(col, prim)
+        if name in cols:
+            continue  # shared count slot
+        if prim == "count":
+            ones = jnp.where(seg >= 0, 1, 0).astype(jnp.int32)
+            cols[name] = _reduce(ones, seg, slots, "sum", group_valid,
+                                 use_kernel)
+        elif prim == "first":
+            cols[name] = _first(st.columns[col], starts, group_valid)
+        else:
+            cols[name] = _reduce(st.columns[col], seg, slots, prim,
+                                 group_valid, use_kernel)
+    return Table(cols, row_count)
+
+
+def _finalize(partial: Table, keys: Sequence[str], pairs) -> Table:
+    """Turn algebraic partials into the user-facing aggregate columns."""
+    cols = {k: partial.columns[k] for k in keys}
+    get = lambda c, p: partial.columns[_prim_name(c, p)]
+    for col, op in pairs:
+        name = f"{col}_{op}"
+        if op in ("sum", "min", "max", "first"):
+            cols[name] = get(col, op)
+        elif op == "count":
+            cols[name] = get(col, "count")
+        elif op == "mean":
+            s = get(col, "sum").astype(jnp.float32)
+            n = jnp.maximum(get(col, "count"), 1).astype(jnp.float32)
+            cols[name] = s / n.reshape((-1,) + (1,) * (s.ndim - 1))
+        elif op == "var":  # population variance: E[x^2] - E[x]^2, clamped
+            s = get(col, "sum").astype(jnp.float32)
+            n = jnp.maximum(get(col, "count"), 1).astype(jnp.float32)
+            n = n.reshape((-1,) + (1,) * (s.ndim - 1))
+            mean = s / n
+            cols[name] = jnp.maximum(get(col, "sumsq") / n - mean * mean, 0.0)
+    return Table(cols, partial.row_count)
+
+
+def groupby(table: Table, keys: Sequence[str] | str, aggs, *,
+            out_capacity: int | None = None, use_kernel=None) -> Table:
+    """Local GroupBy: one output row per distinct key tuple, ordered by key.
+
+    keys: 1-D key column name(s) (exact multi-column comparison).
+    aggs: {col: op | [ops]} or [(col, op), ...]; ops in AGG_OPS. N-D payload
+    columns support sum/min/max/mean/first (element-wise per row-vector).
+    Output columns: keys + ``{col}_{op}``; row_count = number of groups.
+    """
+    keys = [keys] if isinstance(keys, str) else list(keys)
+    pairs = normalize_aggs(aggs)
+    partial = _partial_columns(table, keys, pairs, out_capacity=out_capacity,
+                               use_kernel=use_kernel)
+    return _finalize(partial, keys, pairs)
+
+
+def partial_groupby(table: Table, keys: Sequence[str] | str, aggs, *,
+                    out_capacity: int | None = None, use_kernel=None) -> Table:
+    """Phase 1 of the two-phase strategy: per-shard algebraic partials.
+
+    Output rows are one per locally-distinct key (<= key cardinality, the
+    shuffle-volume win); columns are the mangled partial slots + keys.
+    """
+    keys = [keys] if isinstance(keys, str) else list(keys)
+    pairs = normalize_aggs(aggs)
+    return _partial_columns(table, keys, pairs, out_capacity=out_capacity,
+                            use_kernel=use_kernel)
+
+
+def combine_groupby(partials: Table, keys: Sequence[str] | str, aggs, *,
+                    out_capacity: int | None = None, use_kernel=None) -> Table:
+    """Phase 2: merge partial rows that share a key, then finalize.
+
+    ``combine_groupby(partial_groupby(t, ...), ...) == groupby(t, ...)`` —
+    and partials arriving from different shards (via repartition) combine
+    the same way: sums add, min/max re-reduce, first takes the earliest
+    partial in row order (repartition preserves source-shard order).
+    """
+    keys = [keys] if isinstance(keys, str) else list(keys)
+    pairs = normalize_aggs(aggs)
+    st, seg, num_groups, starts = _segments(partials, keys)
+    cap = st.capacity
+    slots = cap if out_capacity is None else min(cap, out_capacity)
+    row_count = jnp.minimum(num_groups, slots)
+    group_valid = jnp.arange(slots) < row_count
+    starts = starts[:slots]
+
+    cols = {k: _first(st.columns[k], starts, group_valid) for k in keys}
+    for name in st.column_names:
+        if not name.startswith("__"):
+            continue
+        prim = "count" if name == "__count" else name[2:].split("__", 1)[0]
+        comb = _COMBINE[prim]
+        if comb == "first":
+            cols[name] = _first(st.columns[name], starts, group_valid)
+        else:
+            cols[name] = _reduce(st.columns[name], seg, slots, comb,
+                                 group_valid, use_kernel)
+    merged = Table(cols, row_count)
+    return _finalize(merged, keys, pairs)

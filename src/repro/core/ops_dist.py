@@ -17,10 +17,12 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import ops_agg as A
 from repro.core import ops_local as L
 from repro.core.repartition import ShuffleStats, repartition
 from repro.core.table import Table
 from repro.kernels import ops as kops
+from repro.utils import axis_size
 
 
 def _row_pid(table: Table, key_columns: Sequence[str], p: int, seed: int):
@@ -46,7 +48,7 @@ def dist_join(
     so the local join of the repartitioned tables is exact.
     """
     on_l = [on] if isinstance(on, str) else list(on)
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     left2, st_l = repartition(
         left, _row_pid(left, on_l, p, seed), axis_name=axis_name,
         bucket_capacity=bucket_capacity)
@@ -62,7 +64,7 @@ def _dist_set_op(a: Table, b: Table, op, *, axis_name: str, bucket_capacity: int
                  seed: int = 7, **kw):
     """Shuffle by whole-row hash (paper §II-B-4) so duplicates colocate."""
     names = a.column_names
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     a2, st_a = repartition(a, _row_pid(a, names, p, seed), axis_name=axis_name,
                            bucket_capacity=bucket_capacity)
     b2, st_b = repartition(b, _row_pid(b, names, p, seed), axis_name=axis_name,
@@ -83,10 +85,56 @@ def dist_difference(a: Table, b: Table, *, mode: str = "symmetric", **kw):
 
 
 def dist_distinct(a: Table, *, axis_name: str, bucket_capacity: int, seed: int = 7):
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     a2, st = repartition(a, _row_pid(a, a.column_names, p, seed),
                          axis_name=axis_name, bucket_capacity=bucket_capacity)
     return L.distinct(a2), (st,)
+
+
+def dist_groupby(
+    table: Table,
+    keys: Sequence[str] | str,
+    aggs,
+    *,
+    axis_name: str,
+    bucket_capacity: int,
+    strategy: str = "two_phase",
+    partial_capacity: int | None = None,
+    out_capacity: int | None = None,
+    seed: int = 7,
+):
+    """Distributed GroupBy — both strategies of arXiv:2010.14596.
+
+    strategy='shuffle': hash-partition raw rows by key -> AllToAll -> local
+      groupby. Shuffle volume is O(rows) — every row crosses the wire.
+
+    strategy='two_phase': local partial_groupby (<= one row per locally
+      distinct key) -> hash-partition the *partials* -> AllToAll -> local
+      combine + finalize. Shuffle volume is O(shards x cardinality): on
+      low-cardinality keys this moves far fewer bytes, and the AllToAll's
+      ``bucket_capacity`` can shrink to ~cardinality/shards.
+
+    ``partial_capacity`` optionally trims the phase-1 partial table (must
+    bound the per-shard key cardinality; overflow truncates like join).
+    Both strategies produce identical results: one global row per key.
+    """
+    keys_l = [keys] if isinstance(keys, str) else list(keys)
+    pairs = A.normalize_aggs(aggs)
+    p = axis_size(axis_name)
+    if strategy == "shuffle":
+        t2, st = repartition(table, _row_pid(table, keys_l, p, seed),
+                             axis_name=axis_name,
+                             bucket_capacity=bucket_capacity)
+        return A.groupby(t2, keys_l, pairs, out_capacity=out_capacity), (st,)
+    if strategy == "two_phase":
+        part = A.partial_groupby(table, keys_l, pairs,
+                                 out_capacity=partial_capacity)
+        part2, st = repartition(part, _row_pid(part, keys_l, p, seed),
+                                axis_name=axis_name,
+                                bucket_capacity=bucket_capacity)
+        return A.combine_groupby(part2, keys_l, pairs,
+                                 out_capacity=out_capacity), (st,)
+    raise ValueError(strategy)
 
 
 def dist_sort(
@@ -102,7 +150,7 @@ def dist_sort(
     Output ordering: shard i holds keys <= shard i+1's keys; each shard is
     locally sorted — the standard distributed sort contract.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     key = table.columns[by]
     valid = table.valid_mask()
     sentinel = kops.key_max(key.dtype)

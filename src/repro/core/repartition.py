@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.table import Table
 from repro.core.ops_local import compact
 from repro.kernels import ops as kops
+from repro.utils import axis_size
 
 
 class ShuffleStats(NamedTuple):
@@ -69,7 +70,7 @@ def repartition(
     Returns the received table (capacity = num_shards * bucket_capacity,
     valid rows front-compacted) and shuffle stats.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = axis_size(axis_name)
     c = table.capacity
     cb = bucket_capacity
     valid = table.valid_mask()

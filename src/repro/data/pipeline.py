@@ -26,8 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ops_agg as A
 from repro.core import ops_local as L
-from repro.core.table import Table
+from repro.core.table import Table, concat_tables
 from repro.data import synthetic
 
 
@@ -39,6 +40,8 @@ class PipelineConfig:
     quality_threshold: float = 0.2
     oversample: float = 1.6     # raw rows generated per emitted row
     max_refills: int = 8        # deterministic refill rounds before padding
+    collect_stats: bool = False  # per-source quality stats (groupby stage)
+    num_sources: int = 16        # source-bucket cardinality bound (stats)
     seed: int = 0
 
 
@@ -51,6 +54,15 @@ class RelationalTokenPipeline:
         self._raw_rows = max(4, int(np.ceil(c.global_batch * c.oversample)))
         self._etl = jax.jit(partial(
             _etl_step, threshold=c.quality_threshold, batch=c.global_batch))
+        # quality-bucket stats ride the two-phase aggregation machinery:
+        # one partial per refill round, combined once per batch. Bounding
+        # partials by the source cardinality keeps each one tiny (and the
+        # segment count inside the Pallas kernel budget) no matter how
+        # large the raw sample rounds are.
+        self._stats_partial = jax.jit(partial(
+            A.partial_groupby, keys="source", aggs=SOURCE_STAT_AGGS,
+            out_capacity=c.num_sources))
+        self.last_stats: dict[str, np.ndarray] | None = None
 
     # -- shapes (dry-run / sharding contract) --------------------------------
     def batch_specs(self) -> dict[str, jax.ShapeDtypeStruct]:
@@ -78,8 +90,12 @@ class RelationalTokenPipeline:
         toks = np.zeros((need, c.seq_len), np.int32)
         wts = np.zeros((need,), np.float32)
         got = 0
+        stat_partials = []
         for refill in range(c.max_refills):
             samples, labels = self._round(step, refill)
+            if c.collect_stats:
+                stat_partials.append(self._stats_partial(
+                    L.project(samples, ["source", "quality"])))
             tokens, weight, n = self._etl(samples, labels)
             n = int(n)
             take = min(n, need - got)
@@ -88,6 +104,13 @@ class RelationalTokenPipeline:
             got += take
             if got >= need:
                 break
+        if c.collect_stats:
+            cat = stat_partials[0]
+            for part in stat_partials[1:]:
+                cat = concat_tables(cat, part)
+            self.last_stats = A.combine_groupby(
+                cat, "source", SOURCE_STAT_AGGS,
+                out_capacity=c.num_sources).to_numpy()
         if got < need:  # pathological filter rate: wrap-pad deterministically
             reps = -(-need // max(got, 1))
             toks[got:] = np.tile(toks[:got], (reps, 1))[: need - got]
@@ -108,6 +131,18 @@ def _etl_step(samples: Table, labels: Table, *, threshold: float, batch: int):
                     out_capacity=good.capacity)
     out = L.head(L.project(joined, ["tokens", "weight"]), batch)
     return out.columns["tokens"], out.columns["weight"], out.row_count
+
+
+SOURCE_STAT_AGGS = (("quality", "count"), ("quality", "mean"),
+                    ("quality", "var"), ("quality", "min"),
+                    ("quality", "max"))
+
+
+def source_quality_stats(samples: Table) -> Table:
+    """Quality-bucket statistics: GroupBy source -> count/mean/var/min/max
+    of the quality score — the data-quality dashboard stage (and the local
+    half of the distributed two-phase aggregation in examples/etl)."""
+    return A.groupby(samples, "source", SOURCE_STAT_AGGS)
 
 
 class Prefetcher:

@@ -15,6 +15,7 @@ from repro.kernels import ref
 from repro.kernels.bitonic import DEFAULT_TILE, bitonic_sort_tiles
 from repro.kernels.hash64 import hash32
 from repro.kernels.histogram import bucket_histogram
+from repro.kernels.segment_reduce import MAX_SEGMENTS, segment_reduce_tiles
 from repro.utils import next_pow2
 
 __all__ = [
@@ -22,6 +23,7 @@ __all__ = [
     "hash_columns",
     "bucket_histogram",
     "sort_pairs",
+    "segment_reduce",
     "key_max",
 ]
 
@@ -45,6 +47,51 @@ def key_max(dtype) -> jax.Array:
     if jnp.issubdtype(dtype, jnp.floating):
         return jnp.array(jnp.inf, dtype)
     return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "use_kernel"))
+def segment_reduce(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    num_segments: int,
+    op: str = "sum",
+    *,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Segmented sum/min/max: out[g] = op(values[i] where seg_ids[i] == g).
+
+    values: (n, ...) — reductions run along the leading axis; seg_ids: (n,)
+    int32, entries outside [0, num_segments) (padding uses -1) are ignored.
+    Empty segments hold the op identity (ref.seg_init).
+
+    The Pallas one-hot kernel handles the hot shape (1-D values, segment
+    count within one VMEM tile budget); N-D payloads and large segment
+    counts fall back to XLA scatter-reduce — bit-identical semantics.
+    """
+    assert op in ("sum", "min", "max"), op
+    assert seg_ids.ndim == 1 and values.shape[0] == seg_ids.shape[0], (
+        values.shape, seg_ids.shape)
+    kernel_ok = values.ndim == 1 and num_segments <= MAX_SEGMENTS and \
+        values.dtype in (jnp.float32, jnp.int32)
+    if use_kernel is None:
+        use_kernel = kernel_ok
+    elif use_kernel and not kernel_ok:
+        raise ValueError(
+            f"segment_reduce kernel needs 1-D f32/i32 values and "
+            f"num_segments <= {MAX_SEGMENTS}; got shape={values.shape} "
+            f"dtype={values.dtype} num_segments={num_segments}. Pass a "
+            f"tighter out_capacity (groupby) or use_kernel=None for the "
+            f"XLA fallback.")
+    if use_kernel:
+        return segment_reduce_tiles(values, seg_ids, num_segments, op)
+    init = ref.seg_init(op, values.dtype)
+    out = jnp.full((num_segments,) + values.shape[1:], init, values.dtype)
+    # out-of-range ids -> num_segments, dropped by the scatter
+    idx = jnp.where((seg_ids >= 0) & (seg_ids < num_segments),
+                    seg_ids, num_segments)
+    at = out.at[idx]
+    scatter = {"sum": at.add, "min": at.min, "max": at.max}[op]
+    return scatter(values, mode="drop")
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "use_kernel"))

@@ -79,6 +79,45 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# segmented reduction
+# ---------------------------------------------------------------------------
+
+
+def seg_init(op: str, dtype) -> jax.Array:
+    """Identity element of `op` for `dtype` (the empty-segment fill value)."""
+    dtype = jnp.dtype(dtype)
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    lo, hi = (
+        (jnp.array(-jnp.inf, dtype), jnp.array(jnp.inf, dtype))
+        if jnp.issubdtype(dtype, jnp.floating)
+        else (jnp.array(jnp.iinfo(dtype).min, dtype),
+              jnp.array(jnp.iinfo(dtype).max, dtype))
+    )
+    return hi if op == "min" else lo
+
+
+def segment_reduce_ref(values: jax.Array, seg_ids: jax.Array,
+                       num_segments: int, op: str = "sum") -> jax.Array:
+    """Dense one-hot segmented reduction (sum/min/max) — the semantics oracle.
+
+    values: (n, ...) ; seg_ids: (n,) int32, entries outside [0, num_segments)
+    (padding uses -1) contribute nothing. Empty segments hold the identity.
+    """
+    onehot = seg_ids[:, None] == jnp.arange(num_segments)[None, :]  # (n, G)
+    onehot = onehot.reshape(onehot.shape + (1,) * (values.ndim - 1))
+    v = values[:, None]
+    init = seg_init(op, values.dtype)
+    if op == "sum":
+        return jnp.sum(jnp.where(onehot, v, init), axis=0)
+    if op == "min":
+        return jnp.min(jnp.where(onehot, v, init), axis=0)
+    if op == "max":
+        return jnp.max(jnp.where(onehot, v, init), axis=0)
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
 # bucket histogram
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: segmented reduction — the groupby hot path.
+
+After sort-by-key + boundary detection (core/ops_agg.py), aggregation is a
+segmented reduction: ``out[g] = op(values[i] for i where seg_ids[i] == g)``.
+Scatter-accumulate (the CPU/GPU idiom) serializes on TPU; the native
+formulation — same design as kernels/histogram.py — is a one-hot compare
+against the segment iota, reduced over the row axis. For f32 sums the
+one-hot contraction is a matmul, so the accumulation rides the MXU; min/max
+use a masked VPU reduction.
+
+Grid walks row-blocks; each step folds its block's per-segment partials into
+the single (1, G) output block (revisited across the grid — Pallas keeps it
+VMEM-resident, so HBM sees one read of the rows and one write of G results).
+Segment count is capped by MAX_SEGMENTS (the (rows_block, G) one-hot must
+fit in VMEM); larger G falls back to the XLA scatter path in kernels/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.utils import interpret_mode, round_up
+
+LANES = 128
+BLOCK_ROWS = 8  # (8, 128) = 1024 rows per grid step; (1024, G) one-hot fits VMEM
+MAX_SEGMENTS = 1024
+
+OPS = ("sum", "min", "max")
+
+
+def _seg_kernel(seg_ref, val_ref, o_ref, *, op: str, num_segments: int):
+    step = pl.program_id(0)
+    init = ref.seg_init(op, o_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, init)
+
+    seg = seg_ref[...].reshape(-1)  # (BLOCK_ROWS*LANES,)
+    val = val_ref[...].reshape(-1)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, num_segments), 1)
+    onehot = seg[:, None] == buckets  # (rows, G); padding (-1) matches nothing
+    if op == "sum" and val.dtype == jnp.float32:
+        # MXU path: (1, rows) @ (rows, G)
+        o_ref[...] += jnp.dot(val[None, :], onehot.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+    elif op == "sum":
+        o_ref[...] += jnp.sum(jnp.where(onehot, val[:, None], init),
+                              axis=0, keepdims=True)
+    elif op == "min":
+        o_ref[...] = jnp.minimum(
+            o_ref[...],
+            jnp.min(jnp.where(onehot, val[:, None], init), axis=0,
+                    keepdims=True))
+    elif op == "max":
+        o_ref[...] = jnp.maximum(
+            o_ref[...],
+            jnp.max(jnp.where(onehot, val[:, None], init), axis=0,
+                    keepdims=True))
+    else:
+        raise ValueError(op)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "op", "interpret"))
+def segment_reduce_tiles(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    num_segments: int,
+    op: str = "sum",
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Segmented sum/min/max of 1-D `values` into `num_segments` slots.
+
+    seg_ids: (n,) int32; entries outside [0, num_segments) are ignored.
+    Empty segments hold the op identity (0 / +inf-like / -inf-like).
+    Matches ref.segment_reduce_ref exactly.
+    """
+    assert op in OPS, op
+    assert values.ndim == 1 and values.shape == seg_ids.shape, (
+        values.shape, seg_ids.shape)
+    assert num_segments <= MAX_SEGMENTS, (num_segments, MAX_SEGMENTS)
+    if interpret is None:
+        interpret = interpret_mode()
+    (n,) = values.shape
+    tile = BLOCK_ROWS * LANES
+    n_pad = max(round_up(n, tile), tile)
+    g_pad = max(round_up(num_segments, LANES), LANES)
+    segp = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(
+        seg_ids.astype(jnp.int32)).reshape(n_pad // LANES, LANES)
+    valp = jnp.zeros((n_pad,), values.dtype).at[:n].set(values) \
+        .reshape(n_pad // LANES, LANES)
+    grid = (n_pad // tile,)
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, op=op, num_segments=g_pad),
+        out_shape=jax.ShapeDtypeStruct((1, g_pad), values.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, g_pad), lambda i: (0, 0)),
+        interpret=interpret,
+    )(segp, valp)
+    return out.reshape(g_pad)[:num_segments]

@@ -84,6 +84,51 @@ def case_intersect_difference():
             "difference_ok": got_d == sorted(sa ^ sb)}
 
 
+def case_groupby():
+    """Both dist_groupby strategies == local groupby on the gathered table
+    (itself oracle-verified in tests/test_groupby.py), and two-phase
+    shuffles strictly fewer rows on low-cardinality keys."""
+    from repro.core import ops_agg as A
+    from repro.core.table import Table
+    from repro.data.synthetic import zipf_table
+
+    ctx = _ctx()
+    key_range = 48
+    parts = [zipf_table(600, key_range=key_range, seed=11, shard=i)
+             for i in range(ctx.num_shards)]
+    dt = ctx.from_local_parts(parts)
+    aggs = (("d0", "sum"), ("d0", "count"), ("d0", "min"), ("d0", "max"),
+            ("d0", "mean"), ("d0", "var"), ("d0", "first"), ("d1", "sum"))
+
+    # reference: local groupby over the global concatenation in shard order
+    cols = {k: np.concatenate([p.to_numpy()[k] for p in parts])
+            for k in parts[0].column_names}
+    ref_t = A.groupby(Table.from_arrays(cols), "k", aggs)
+    ref = ref_t.to_numpy()
+
+    out = {"groups_expect": int(ref_t.row_count)}
+    received = {}
+    for strat, cb in (("shuffle", 1024), ("two_phase", 64)):
+        g, (st,) = ctx.groupby(dt, "k", aggs, strategy=strat,
+                               bucket_capacity=cb)
+        d = g.to_table().to_numpy()
+        order = np.argsort(d["k"])
+        ok = bool(np.array_equal(d["k"][order], ref["k"]))
+        exact = ("d0_count",)
+        for name in ref:
+            got = d[name][order]
+            if name in exact or not np.issubdtype(got.dtype, np.floating):
+                ok &= bool(np.array_equal(got, ref[name]))
+            else:
+                ok &= bool(np.allclose(got, ref[name], atol=1e-4, rtol=1e-4))
+        out[f"{strat}_ok"] = ok
+        out[f"{strat}_overflow"] = int(np.asarray(st.overflow).sum())
+        received[strat] = int(np.asarray(st.received).sum())
+        out[f"{strat}_received"] = received[strat]
+    out["two_phase_fewer_rows"] = received["two_phase"] < received["shuffle"]
+    return out
+
+
 def case_moe_ep():
     """EP shard_map dispatch == single-device dispatch (same weights)."""
     from repro.models.common import ModelConfig

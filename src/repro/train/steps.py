@@ -201,11 +201,11 @@ def make_train_step(model: Model, ocfg: OptConfig, *, microbatches: int = 1,
         ef_specs = jax.tree.map(lambda e: P(POD_AXIS), state.ef)
         batch_in = jax.tree.map(lambda x: P(POD_AXIS), batch)
         from repro.utils import shard_map as _sm  # compat wrapper
-        grads, new_ef, metrics = jax.shard_map(
+        grads, new_ef, metrics = _sm(
             pod_body, mesh=mesh,
             in_specs=(P(), ef_specs, batch_in),
             out_specs=(P(), ef_specs, P()),
-            axis_names={POD_AXIS}, check_vma=False,
+            axis_names={POD_AXIS}, check_rep=False,
         )(state.params, state.ef, batch)
         params, opt, om = apply_updates(state.params, grads, state.opt, ocfg)
         return TrainState(params, opt, state.step + 1, new_ef), \

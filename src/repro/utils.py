@@ -52,18 +52,53 @@ def safe_constrain(x, mesh, spec):
         if am is not None and any(
                 "Manual" in str(t) for t in getattr(am, "axis_types", ())):
             return x
-    except Exception:  # noqa: BLE001 — older jax: fall through to try/except
-        pass
+    except Exception:  # noqa: BLE001 — older jax: check the axis env instead
+        # jax<0.5 rejects the constraint only at lowering (uncatchable
+        # here), so pre-check: inside a shard_map, axes are bound in the
+        # axis env — drop the hint if the spec mentions any of them.
+        try:
+            from jax._src.core import get_axis_env
+            bound = set(get_axis_env().axis_sizes)
+        except Exception:  # noqa: BLE001
+            bound = set()
+        named = set()
+        for part in spec:
+            if part is None:
+                continue
+            named |= set(part) if isinstance(part, tuple) else {part}
+        if named & bound:
+            return x
     try:
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
     except ValueError:
         return x
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
-    """Version-compat shard_map (jax>=0.8 moved it to jax.shard_map)."""
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=check_rep)
+def axis_size(axis_name) -> int:
+    """Version-compat static mesh-axis size inside shard_map/pmap bodies
+    (jax<0.5 has no jax.lax.axis_size; psum of the unit constant folds to
+    the static size there)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False,
+              axis_names=None):
+    """Version-compat shard_map (jax>=0.8 moved it to jax.shard_map).
+
+    axis_names: axes to run manually (the rest stay auto); None = all.
+    The old experimental API spells that as auto=<complement>.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": set(axis_names)}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_rep, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if axis_names is None else {
+        "auto": frozenset(mesh.axis_names) - set(axis_names)}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_rep, **kw)
 
 
 def tree_bytes(tree) -> int:

@@ -1,4 +1,6 @@
 import os
+import pathlib
+import re
 import sys
 
 # Tests run single-device (the dry-run sets its own 512-device flag in a
@@ -8,7 +10,20 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings  # noqa: E402
-
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings  # noqa: E402
+except ImportError:
+    # Minimal environments (no hypothesis): skip the property-test modules
+    # instead of failing collection, so the tier-1 gate still runs the
+    # example-based suite. Modules are detected by their import, so a new
+    # hypothesis-based test file degrades the same way automatically.
+    _here = pathlib.Path(__file__).parent
+    _imports_hypothesis = re.compile(
+        r"^\s*(from|import)\s+hypothesis\b", re.MULTILINE)
+    collect_ignore = [
+        p.name for p in _here.glob("test_*.py")
+        if _imports_hypothesis.search(p.read_text(encoding="utf-8"))
+    ]
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

@@ -87,6 +87,53 @@ def join_oracle(left, right, on, how="inner", suffix="_r"):
     return all_names, sorted(out)
 
 
+def groupby_oracle(table, keys, aggs):
+    """Keyed-aggregation ground truth, plain-Python row semantics.
+
+    table: dict col -> np.ndarray (N-D payloads allowed); keys: list of 1-D
+    key column names; aggs: list of (col, op) with op in repro's AGG_OPS.
+    Returns dict col -> np.ndarray with one row per group, rows sorted by
+    key tuple (the order repro's sort-based groupby emits). mean/var are
+    float64 (compare with allclose); 'first' is first occurrence in input
+    row order; var is the population variance.
+    """
+    n = len(np.asarray(table[keys[0]]))
+    key_cols = [np.asarray(table[k]) for k in keys]
+    order = {}
+    members: dict[tuple, list[int]] = {}
+    for i in range(n):
+        kt = tuple(c[i].item() for c in key_cols)
+        members.setdefault(kt, []).append(i)
+    out_keys = sorted(members)
+    out: dict[str, list] = {k: [] for k in keys}
+    for col, op in aggs:
+        out[f"{col}_{op}"] = []
+    for kt in out_keys:
+        idx = members[kt]
+        for k, v in zip(keys, kt):
+            out[k].append(v)
+        for col, op in aggs:
+            g = np.asarray(table[col])[idx]
+            if op == "sum":
+                r = g.sum(axis=0)
+            elif op == "count":
+                r = len(idx)
+            elif op == "min":
+                r = g.min(axis=0)
+            elif op == "max":
+                r = g.max(axis=0)
+            elif op == "mean":
+                r = g.astype(np.float64).mean(axis=0)
+            elif op == "var":
+                r = g.astype(np.float64).var(axis=0)
+            elif op == "first":
+                r = g[0]
+            else:
+                raise ValueError(op)
+            out[f"{col}_{op}"].append(r)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
 def table_rows_sorted(t):
     """Valid rows of a repro Table as sorted tuples (cols sorted by name)."""
     d = t.to_numpy()

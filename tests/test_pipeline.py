@@ -57,6 +57,40 @@ def test_prefetcher_order():
         np.testing.assert_array_equal(a, b["tokens"])
 
 
+def test_quality_stats_stage():
+    """The groupby stats stage: per-source mean/var/count over ALL refill
+    rounds consumed for the batch (partial -> combine, the two-phase path)."""
+    from repro.data.pipeline import source_quality_stats
+
+    cfg = PipelineConfig(seq_len=8, global_batch=16, vocab_size=50,
+                         quality_threshold=0.9, collect_stats=True, seed=5)
+    p = RelationalTokenPipeline(cfg)
+    p.global_batch(0)
+    s = p.last_stats
+    assert s is not None
+    # oracle: concatenate the raw sample rounds the batch actually consumed
+    n_rounds = int(round(s["quality_count"].sum())) // p._raw_rows
+    src, qual = [], []
+    for refill in range(max(n_rounds, 1)):
+        samples, _ = p._round(0, refill)
+        d = samples.to_numpy()
+        src.append(d["source"]); qual.append(d["quality"])
+    src, qual = np.concatenate(src), np.concatenate(qual)
+    assert s["quality_count"].sum() == len(src)
+    for i, b in enumerate(s["source"]):
+        g = qual[src == b]
+        assert s["quality_count"][i] == len(g)
+        np.testing.assert_allclose(s["quality_mean"][i], g.mean(), atol=1e-5)
+        np.testing.assert_allclose(s["quality_var"][i], g.var(), atol=1e-4)
+
+    # standalone stage on a single table
+    t = synthetic.lm_samples_table(300, 8, 50, seed=9)
+    d = t.to_numpy()
+    st = source_quality_stats(t).to_numpy()
+    assert st["quality_count"].sum() == 300
+    assert set(st["source"].tolist()) == set(d["source"].tolist())
+
+
 def test_synthetic_streams_independent():
     a = synthetic.random_table(100, seed=0, step=0, shard=0)
     b = synthetic.random_table(100, seed=0, step=0, shard=1)
