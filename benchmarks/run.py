@@ -7,6 +7,7 @@ Sections:
   Fig10 binding/dispatch overhead (bench_binding_overhead)
   kernels roofline (bench_kernels)
   groupby strategies: shuffle vs two-phase (bench_groupby)
+  lazy plan fusion: fused vs eager ETL chain (bench_plan)
   Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
 
 --json writes every section's tables as machine-readable records (the
@@ -30,7 +31,8 @@ def main() -> None:
 
     t0 = time.perf_counter()
     from benchmarks import (bench_binding_overhead, bench_groupby,
-                            bench_kernels, bench_scaling, bench_vs_baselines)
+                            bench_kernels, bench_plan, bench_scaling,
+                            bench_vs_baselines)
 
     print(f"# benchmark run (quick={quick})")
     sections = [
@@ -38,6 +40,7 @@ def main() -> None:
         ("binding_overhead", bench_binding_overhead.main),
         ("kernels", bench_kernels.main),
         ("groupby", bench_groupby.main),
+        ("plan", bench_plan.main),
         ("scaling", bench_scaling.main),
     ]
     results: dict[str, list[dict]] = {}

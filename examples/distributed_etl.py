@@ -3,6 +3,13 @@
 Each worker holds a partition; distributed join/union run as
 hash-partition + AllToAll + local op in BSP lockstep (shard_map).
 
+The headline here is the **LazyFrame** path: the whole
+join -> select -> groupby ETL chain compiles into ONE fused shard_map
+program whose optimizer pushes the filter and projections below the
+AllToAll and elides the groupby's shuffle entirely (the join already
+co-partitioned the rows on the key) — fewer dispatches, fewer shuffles,
+fewer wire bytes, bit-identical results.
+
     PYTHONPATH=src python examples/distributed_etl.py
 """
 import os
@@ -28,42 +35,82 @@ def main():
 
     # per-worker partitions (the paper's per-worker CSV files)
     orders = ctx.from_local_parts([
-        random_table(4000, key_range=2000, seed=1, shard=i, key_name="k")
+        random_table(4000, key_range=8000, seed=1, shard=i, key_name="k")
         for i in range(ctx.num_shards)])
     users = ctx.from_local_parts([
-        zipf_table(4000, key_range=2000, seed=2, shard=i, key_name="k")
+        random_table(4000, key_range=8000, seed=2, shard=i, key_name="k")
         for i in range(ctx.num_shards)])
 
-    # distributed inner join (hash algorithm; skewed side stresses buckets)
-    joined, (sl, sr) = ctx.join(orders, users, "k", algorithm="hash",
-                                bucket_capacity=4096)
-    print(f"distributed join: {int(joined.global_rows())} rows; "
-          f"send overflow: {int(np.asarray(sl.overflow).sum())} "
-          f"+ {int(np.asarray(sr.overflow).sum())}")
+    # ---- fused LazyFrame ETL chain: ONE shard_map program ------------------
+    aggs = {"d0": ["mean", "var"], "d1": ["count", "min", "max"]}
+    chain = (ctx.frame(orders)
+             .join(ctx.frame(users), "k", algorithm="hash",
+                   bucket_capacity=4096)
+             .select(lambda c: c["d0"] > 0.0, key="d0_positive")
+             .groupby("k", aggs, strategy="shuffle"))
+    print("\noptimized plan (note pushed-down Select/Project, elided "
+          "groupby shuffle):")
+    print(chain.explain())
+    rep = chain.plan_report()
+    fused_a2a = sum(not r["elided"] for r in rep)
+    fused_mb = sum(r["wire_bytes"] for r in rep) / 1e6
+    fused = chain.collect()
+    print(f"fused chain: {int(fused.global_rows())} groups, "
+          f"{fused_a2a} AllToAlls, {fused_mb:.2f} MB on the wire")
 
+    # eager op-by-op chain: same semantics, one dispatch + shuffle per op
+    erep: list = []
+    j, (sl, sr) = ctx.join(orders, users, "k", algorithm="hash",
+                           bucket_capacity=4096, report=erep)
+    s = ctx.select(j, lambda c: c["d0"] > 0.0, key="d0_positive")
+    g, _ = ctx.groupby(s, "k", aggs, strategy="shuffle", report=erep)
+    eager_a2a = sum(not r["elided"] for r in erep)
+    eager_mb = sum(r["wire_bytes"] for r in erep) / 1e6
+    print(f"eager chain: {int(g.global_rows())} groups, "
+          f"{eager_a2a} AllToAlls, {eager_mb:.2f} MB on the wire "
+          f"(join overflow {int(np.asarray(sl.overflow).sum())}"
+          f"+{int(np.asarray(sr.overflow).sum())})")
+    from repro.testing.compare import tables_bitwise_equal
+    assert tables_bitwise_equal(g, fused), "fused != eager"
+    print(f"fused == eager (bit-identical), "
+          f"{eager_a2a - fused_a2a} AllToAlls and "
+          f"{eager_mb - fused_mb:.2f} MB saved")
+
+    # ---- co-partitioned join fast path -------------------------------------
+    dims, _ = ctx.partition_by(ctx.from_local_parts([
+        random_table(1000, key_range=8000, seed=5, shard=i, num_payload=1,
+                     key_name="k") for i in range(ctx.num_shards)]), "k")
+    f2 = ctx.frame(g).join(ctx.frame(dims), "k")
+    rep2 = f2.plan_report()
+    assert all(r["elided"] for r in rep2), rep2
+    print(f"co-partitioned join: both shuffles elided "
+          f"({int(f2.collect().global_rows())} rows, zero wire bytes)")
+
+    # ---- eager operators, unchanged API ------------------------------------
     # distributed union-distinct over the key column
     u, _ = ctx.union(ctx.project(orders, ["k"]), ctx.project(users, ["k"]),
                      bucket_capacity=4096)
-    print(f"distributed union-distinct: {int(u.global_rows())} keys")
+    print(f"\ndistributed union-distinct: {int(u.global_rows())} keys")
 
-    # distributed sort -> globally ordered across shards
-    s, _ = ctx.sort(ctx.project(orders, ["k"]), "k", bucket_capacity=8192)
-    ks = s.to_table().to_numpy()["k"].astype(np.int64)
-    assert np.all(np.diff(ks) >= 0), "global order violated"
-    print(f"distributed sort ok over {len(ks)} rows "
-          f"(min={ks[0]}, max={ks[-1]})")
-
-    # pleasingly-parallel select (no network, paper §II-B-1)
-    sel = ctx.select(orders, lambda c: c["d0"] > 1.0)
-    print(f"select d0>1: {int(sel.global_rows())} rows")
+    # distributed multi-key sort -> globally lex-ordered across shards
+    s2, _ = ctx.sort(ctx.project(orders, ["k", "d0"]), ["k", "d0"],
+                     bucket_capacity=8192)
+    d = s2.to_table().to_numpy()
+    ks = np.stack([d["k"].astype(np.int64), d["d0"]], axis=1)
+    order_ok = all(
+        (a[0], a[1]) <= (b[0], b[1]) for a, b in zip(ks[:-1], ks[1:]))
+    assert order_ok, "global lexicographic order violated"
+    print(f"distributed sort by (k, d0) ok over {len(ks)} rows")
 
     # distributed groupby: per-key stats, both aggregation strategies.
     # two_phase shuffles <= cardinality partial rows per shard instead of
     # every raw row, so its AllToAll buckets can be ~rows/cardinality smaller.
-    aggs = {"d0": ["mean", "var"], "d1": ["count", "min", "max"]}
-    g_sh, (st_sh,) = ctx.groupby(orders, "k", aggs, strategy="shuffle",
+    small = ctx.from_local_parts([
+        zipf_table(4000, key_range=2000, seed=3, shard=i, key_name="k")
+        for i in range(ctx.num_shards)])
+    g_sh, (st_sh,) = ctx.groupby(small, "k", aggs, strategy="shuffle",
                                  bucket_capacity=2048)
-    g_tp, (st_tp,) = ctx.groupby(orders, "k", aggs, strategy="two_phase",
+    g_tp, (st_tp,) = ctx.groupby(small, "k", aggs, strategy="two_phase",
                                  bucket_capacity=640)
     rows_sh = int(np.asarray(st_sh.received).sum())
     rows_tp = int(np.asarray(st_tp.received).sum())
@@ -76,14 +123,17 @@ def main():
           f"shuffled rows {rows_sh} (shuffle) vs {rows_tp} (two-phase, "
           f"{rows_sh / max(rows_tp, 1):.1f}x fewer)")
 
-    # quality-bucket statistics stage (data/pipeline.py) on LM samples
+    # quality-bucket statistics stage (data/pipeline.py) on LM samples,
+    # via the same LazyFrame entry point
     from repro.data.pipeline import SOURCE_STAT_AGGS
     from repro.data.synthetic import lm_samples_table
     samples = ctx.from_local_parts([
         ctx_project_sample(lm_samples_table(512, 8, 1000, seed=3, shard=i))
         for i in range(ctx.num_shards)])
-    stats, _ = ctx.groupby(samples, "source", SOURCE_STAT_AGGS,
-                           strategy="two_phase", bucket_capacity=64)
+    stats = (ctx.frame(samples)
+             .groupby("source", SOURCE_STAT_AGGS, strategy="two_phase",
+                      bucket_capacity=64)
+             .collect())
     d = stats.to_table().to_numpy()
     print("quality stats by source bucket:")
     for i in np.argsort(d["source"]):

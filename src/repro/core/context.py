@@ -7,11 +7,22 @@ relational operators as jitted ``shard_map`` programs: the BSP worker code in
 ``ops_dist.py`` runs once per shard in SPMD lockstep, and the MPI AllToAll
 becomes ``jax.lax.all_to_all`` over ``axis_name``.
 
+Every operator — eager or lazy — executes through ONE path: build a logical
+plan (``repro.core.plan``), compile it to a single ``shard_map`` body, run it
+under ``jit`` keyed by the canonicalized plan. The eager methods below are
+one-node plans (semantics identical to the pre-plan implementation: same
+shuffles, same seeds, same stats); :meth:`frame` opens the lazy builder
+whose ``collect()`` fuses a whole chain into one dispatch with the
+optimizer's pushdowns and shuffle elisions applied.
+
 A distributed table (:class:`DistTable`) is the global view: every column is
 a device array whose leading dim is ``num_shards * local_capacity`` (sharded
 over the shuffle axis), plus per-shard ``row_counts``. Shard *i* owns rows
 ``[i*C, i*C + row_counts[i])`` — Cylon's "each worker holds a partition of
-the table" made explicit in the array layout.
+the table" made explicit in the array layout. A table also carries an
+optional static :class:`~repro.core.repartition.Partitioning` tag recording
+how its rows are placed; ``ctx.frame`` threads the tag into the optimizer,
+which elides shuffles the tag proves redundant.
 
 Transport selection (paper §II-D: TCP vs Infiniband) becomes *mesh-axis
 selection*: shuffling over an intra-pod axis rides ICI; an axis that spans
@@ -21,7 +32,6 @@ communication-layer abstraction, preserved.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Sequence
 
 import jax
@@ -29,9 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import ops_dist as D
-from repro.core import ops_local as L
-from repro.core.repartition import ShuffleStats, default_bucket_capacity
+from repro.core import ops_agg as A
+from repro.core import plan as PL
+from repro.core.repartition import Partitioning
 from repro.core.table import Table
 from repro.utils import ceil_div
 
@@ -39,19 +49,27 @@ from repro.utils import ceil_div
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class DistTable:
-    """Global view of a sharded Table: columns (P*C, ...) + row_counts (P,)."""
+    """Global view of a sharded Table: columns (P*C, ...) + row_counts (P,).
+
+    ``partitioning`` is static placement metadata (not a pytree leaf): when
+    set, rows satisfy ``shard == hash(keys) % num_partitions`` — the
+    invariant the plan optimizer uses to elide shuffles.
+    """
 
     columns: dict[str, jax.Array]
     row_counts: jax.Array  # (num_shards,) int32
+    partitioning: Partitioning | None = None
 
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
-        return ((tuple(self.columns[n] for n in names), self.row_counts), names)
+        return ((tuple(self.columns[n] for n in names), self.row_counts),
+                (names, self.partitioning))
 
     @classmethod
-    def tree_unflatten(cls, names, children):
+    def tree_unflatten(cls, aux, children):
+        names, partitioning = aux
         cols, rc = children
-        return cls(dict(zip(names, cols)), rc)
+        return cls(dict(zip(names, cols)), rc, partitioning)
 
     @property
     def num_shards(self) -> int:
@@ -64,6 +82,12 @@ class DistTable:
     @property
     def column_names(self) -> list[str]:
         return sorted(self.columns)
+
+    @property
+    def schema(self) -> dict[str, jax.ShapeDtypeStruct]:
+        """Per-row schema: name -> ShapeDtypeStruct of the trailing shape."""
+        return {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                for k, v in sorted(self.columns.items())}
 
     def global_rows(self) -> jax.Array:
         return jnp.sum(self.row_counts)
@@ -111,6 +135,16 @@ class DistContext:
                 ) -> DistTable:
         """Round-robin-block scatter a host Table into `num_shards` shards."""
         p = self.num_shards
+        if p == 1 and (local_capacity is None
+                       or local_capacity == table.capacity):
+            # single-shard fast path: the table IS the only partition —
+            # no host round-trip / repack (the ETL hot loop rides this)
+            cols = {k: jax.device_put(v, self._sharding(v.ndim))
+                    for k, v in table.columns.items()}
+            rc = jax.device_put(
+                jnp.reshape(jnp.asarray(table.row_count, jnp.int32), (1,)),
+                NamedSharding(self.mesh, P(self.axis_name)))
+            return DistTable(cols, rc)
         n = int(table.row_count)
         c = local_capacity or max(1, ceil_div(table.capacity, p))
         counts = np.full((p,), n // p, np.int32)
@@ -143,12 +177,22 @@ class DistContext:
         rc = jax.device_put(rc, NamedSharding(self.mesh, P(self.axis_name)))
         return DistTable(cols, rc)
 
-    # -- shard_map plumbing ---------------------------------------------------
-    def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
-        """Execute per-shard `body` over DistTables under shard_map + jit.
+    # -- the lazy builder ----------------------------------------------------
+    def frame(self, table: Table | DistTable):
+        """Open a :class:`~repro.core.frame.LazyFrame` over ``table``.
 
-        `key` controls the jit cache (None -> no caching, e.g. user lambdas).
+        Operators chained on the frame defer until ``collect()``, which
+        optimizes the whole plan (predicate/projection pushdown, shuffle
+        elision from the table's Partitioning tag) and runs it as ONE
+        shard_map program.
         """
+        from repro.core.frame import LazyFrame
+
+        return LazyFrame.scan(self, table)
+
+    # -- shard_map plumbing ---------------------------------------------------
+    def _make_global(self, body: Callable) -> Callable:
+        """Wrap a per-shard `body(*tables) -> (Table, stats)` in shard_map."""
         from repro.utils import shard_map
 
         axis = self.axis_name
@@ -166,6 +210,14 @@ class DistContext:
                            out_specs=P(axis))
             return fn(*args)
 
+        return global_fn
+
+    def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
+        """Execute per-shard `body` over DistTables under shard_map + jit.
+
+        `key` controls the jit cache (None -> no caching, e.g. user lambdas).
+        """
+        global_fn = self._make_global(body)
         args = tuple((t.columns, t.row_counts) for t in tabs)
         if key is not None:
             sig = (key, tuple(
@@ -181,75 +233,102 @@ class DistContext:
             cols, rc, stats = jax.jit(global_fn)(*args)
         return DistTable(cols, rc), stats
 
-    def _bucket_cap(self, t: DistTable, bucket_capacity: int | None,
-                    slack: float = 2.0) -> int:
-        if bucket_capacity is not None:
-            return bucket_capacity
-        return default_bucket_capacity(t.local_capacity, self.num_shards, slack)
+    def _run_plan(self, plan: PL.Node, tabs: Sequence[DistTable], *,
+                  optimize: bool = False, report: list | None = None):
+        """The single execution path: (optionally optimized) plan -> one
+        shard_map body -> jit keyed by the canonical plan.
+
+        ``report``, when given, receives one static record per potential
+        shuffle at TRACE time — a jit-cache hit leaves it empty (use
+        ``LazyFrame.plan_report()`` for an always-filled dry run).
+        """
+        p = self.num_shards
+        schemas = [t.schema for t in tabs]
+        if optimize:
+            plan, part = PL.optimize_with_partitioning(plan, schemas, p)
+        else:
+            part = PL.output_partitioning(plan, schemas, p)
+        key = PL.canonical_key(plan)
+
+        def body(*tables):
+            return PL.execute_plan(plan, tables, axis_name=self.axis_name,
+                                   num_shards=p, report=report)
+
+        out, stats = self._run(None if key is None else ("plan", key),
+                               body, tabs)
+        return dataclasses.replace(out, partitioning=part), stats
 
     # -- pleasingly parallel operators (no network; paper §II-B-1/2) ----------
-    def select(self, t: DistTable, predicate: Callable[[dict], jax.Array]
-               ) -> DistTable:
-        out, _ = self._run(None, lambda a: (L.select(a, predicate), ()), [t])
+    def select(self, t: DistTable, predicate: Callable[[dict], jax.Array],
+               *, key=None, report: list | None = None) -> DistTable:
+        """Filter rows by `predicate`. ``key``: optional hashable cache key
+        for the predicate — without it every call recompiles (a fresh
+        lambda can't be canonicalized). The key must cover any values the
+        predicate CAPTURES (e.g. ``key=("q>", threshold)``); differing
+        predicate code under the same key is caught by a bytecode
+        fingerprint, captured values are not."""
+        plan = PL.Select(PL.Scan(0), predicate, key=key)
+        out, _ = self._run_plan(plan, [t], report=report)
         return out
 
-    def project(self, t: DistTable, columns: Sequence[str]) -> DistTable:
-        cols = tuple(columns)
-        out, _ = self._run(("project", cols),
-                           lambda a: (L.project(a, cols), ()), [t])
+    def project(self, t: DistTable, columns: Sequence[str],
+                *, report: list | None = None) -> DistTable:
+        plan = PL.Project(PL.Scan(0), tuple(columns))
+        out, _ = self._run_plan(plan, [t], report=report)
         return out
 
     # -- shuffle-based operators (paper §II-B-3..6, Fig. 3) -------------------
+    def partition_by(self, t: DistTable, keys, *, seed: int = 7,
+                     bucket_capacity=None, report: list | None = None):
+        """Explicitly hash-repartition ``t`` on ``keys`` and tag the result.
+
+        Pre-partition a dimension table once; every later join/groupby on
+        ``keys`` (same seed) through :meth:`frame` elides its shuffle.
+        """
+        keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
+        plan = PL.Repartition(PL.Scan(0), keys_t, seed=seed,
+                              bucket_capacity=bucket_capacity)
+        return self._run_plan(plan, [t], report=report)
+
     def join(self, left: DistTable, right: DistTable, on, *, how="inner",
              algorithm="sort", bucket_capacity=None, out_capacity=None,
-             seed: int = 7):
+             seed: int = 7, report: list | None = None):
         on_t = (on,) if isinstance(on, str) else tuple(on)
-        cb_l = self._bucket_cap(left, bucket_capacity)
-        cb_r = self._bucket_cap(right, bucket_capacity)
-        cb = max(cb_l, cb_r)
-
-        def body(a, b):
-            return D.dist_join(a, b, list(on_t), axis_name=self.axis_name,
-                               bucket_capacity=cb, how=how, algorithm=algorithm,
-                               out_capacity=out_capacity, seed=seed)
-
-        key = ("join", on_t, how, algorithm, cb, out_capacity, seed)
-        return self._run(key, body, [left, right])
+        plan = PL.Join(PL.Scan(0), PL.Scan(1), on_t, how=how,
+                       algorithm=algorithm, bucket_capacity=bucket_capacity,
+                       out_capacity=out_capacity, seed=seed)
+        return self._run_plan(plan, [left, right], report=report)
 
     def union(self, a: DistTable, b: DistTable, *, bucket_capacity=None,
-              seed: int = 7):
-        cb = max(self._bucket_cap(a, bucket_capacity),
-                 self._bucket_cap(b, bucket_capacity))
-        body = lambda x, y: D.dist_union(
-            x, y, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
-        return self._run(("union", cb, seed), body, [a, b])
+              seed: int = 7, report: list | None = None):
+        plan = PL.Union(PL.Scan(0), PL.Scan(1),
+                        bucket_capacity=bucket_capacity, seed=seed)
+        return self._run_plan(plan, [a, b], report=report)
 
     def intersect(self, a: DistTable, b: DistTable, *, bucket_capacity=None,
-                  seed: int = 7):
-        cb = max(self._bucket_cap(a, bucket_capacity),
-                 self._bucket_cap(b, bucket_capacity))
-        body = lambda x, y: D.dist_intersect(
-            x, y, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
-        return self._run(("intersect", cb, seed), body, [a, b])
+                  seed: int = 7, report: list | None = None):
+        plan = PL.Intersect(PL.Scan(0), PL.Scan(1),
+                            bucket_capacity=bucket_capacity, seed=seed)
+        return self._run_plan(plan, [a, b], report=report)
 
     def difference(self, a: DistTable, b: DistTable, *, mode="symmetric",
-                   bucket_capacity=None, seed: int = 7):
-        cb = max(self._bucket_cap(a, bucket_capacity),
-                 self._bucket_cap(b, bucket_capacity))
-        body = lambda x, y: D.dist_difference(
-            x, y, mode=mode, axis_name=self.axis_name, bucket_capacity=cb,
-            seed=seed)
-        return self._run(("difference", mode, cb, seed), body, [a, b])
+                   bucket_capacity=None, seed: int = 7,
+                   report: list | None = None):
+        plan = PL.Difference(PL.Scan(0), PL.Scan(1),
+                             bucket_capacity=bucket_capacity, seed=seed,
+                             mode=mode)
+        return self._run_plan(plan, [a, b], report=report)
 
-    def distinct(self, a: DistTable, *, bucket_capacity=None, seed: int = 7):
-        cb = self._bucket_cap(a, bucket_capacity)
-        body = lambda x: D.dist_distinct(
-            x, axis_name=self.axis_name, bucket_capacity=cb, seed=seed)
-        return self._run(("distinct", cb, seed), body, [a])
+    def distinct(self, a: DistTable, *, bucket_capacity=None, seed: int = 7,
+                 report: list | None = None):
+        plan = PL.Distinct(PL.Scan(0), bucket_capacity=bucket_capacity,
+                           seed=seed)
+        return self._run_plan(plan, [a], report=report)
 
     def groupby(self, t: DistTable, keys, aggs, *, strategy: str = "two_phase",
                 bucket_capacity=None, partial_capacity: int | None = None,
-                out_capacity: int | None = None, seed: int = 7):
+                out_capacity: int | None = None, seed: int = 7,
+                report: list | None = None):
         """Distributed GroupBy (strategy='two_phase' | 'shuffle').
 
         Two-phase (default, arXiv:2010.14596): per-shard partial aggregates
@@ -257,29 +336,18 @@ class DistContext:
         ``bucket_capacity`` (~cardinality x slack / shards) to shrink the
         AllToAll wire volume accordingly. 'shuffle' moves every row.
         """
-        from repro.core import ops_agg as A
-
         keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
         pairs = A.normalize_aggs(aggs)  # canonical form: the jit-cache key
-        cb = self._bucket_cap(t, bucket_capacity)
+        plan = PL.GroupBy(PL.Scan(0), keys_t, pairs, strategy=strategy,
+                          bucket_capacity=bucket_capacity,
+                          partial_capacity=partial_capacity,
+                          out_capacity=out_capacity, seed=seed)
+        return self._run_plan(plan, [t], report=report)
 
-        def body(x):
-            # pass the canonical pairs through; dist_groupby's own
-            # normalize_aggs is idempotent on them
-            return D.dist_groupby(
-                x, list(keys_t), pairs, axis_name=self.axis_name,
-                bucket_capacity=cb, strategy=strategy,
-                partial_capacity=partial_capacity, out_capacity=out_capacity,
-                seed=seed)
-
-        key = ("groupby", keys_t, pairs, strategy, cb, partial_capacity,
-               out_capacity, seed)
-        return self._run(key, body, [t])
-
-    def sort(self, a: DistTable, by: str, *, bucket_capacity=None,
-             samples_per_shard: int = 64):
-        cb = self._bucket_cap(a, bucket_capacity, slack=4.0)
-        body = lambda x: D.dist_sort(
-            x, by, axis_name=self.axis_name, bucket_capacity=cb,
-            samples_per_shard=samples_per_shard)
-        return self._run(("sort", by, cb, samples_per_shard), body, [a])
+    def sort(self, a: DistTable, by, *, bucket_capacity=None,
+             samples_per_shard: int = 64, report: list | None = None):
+        """Global sort by one or more key columns (lexicographic order)."""
+        by_t = (by,) if isinstance(by, str) else tuple(by)
+        plan = PL.Sort(PL.Scan(0), by_t, bucket_capacity=bucket_capacity,
+                       samples_per_shard=samples_per_shard)
+        return self._run_plan(plan, [a], report=report)

@@ -1,0 +1,193 @@
+"""LazyFrame — the user-facing lazy relational builder (paper §II composed).
+
+``ctx.frame(t).select(...).join(...).groupby(...).collect()`` records a
+logical plan (``repro.core.plan``) instead of executing operator by
+operator. ``collect()`` optimizes the plan (predicate/projection pushdown,
+shuffle elision from Partitioning tags) and compiles it into ONE
+``shard_map`` body run through a single jitted dispatch — so an N-operator
+ETL chain pays one launch and no full-capacity DistTable intermediates,
+with the canonicalized plan as the jit-cache key (a pipeline re-collected
+every step compiles exactly once).
+
+The eager ``DistContext`` methods remain available and byte-compatible;
+they run one-node plans through the same compiler. A frame and an eager
+result interoperate freely: ``ctx.frame(eager_result)`` picks up the
+result's Partitioning tag, so e.g. a groupby chained after a join on the
+same key elides its shuffle (the co-partitioned fast path).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+
+from repro.core import ops_agg as A
+from repro.core import plan as PL
+from repro.core.context import DistContext, DistTable
+from repro.core.table import Table
+
+
+class LazyFrame:
+    """A deferred relational expression over one or more DistTables."""
+
+    def __init__(self, ctx: DistContext, plan: PL.Node,
+                 inputs: tuple[DistTable, ...]):
+        self._ctx = ctx
+        self._plan = plan
+        self._inputs = tuple(inputs)
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def scan(cls, ctx: DistContext, table: Table | DistTable) -> "LazyFrame":
+        if isinstance(table, Table):
+            table = ctx.scatter(table)
+        return cls(ctx, PL.Scan(0, partitioning=table.partitioning), (table,))
+
+    def _chain(self, plan: PL.Node) -> "LazyFrame":
+        return LazyFrame(self._ctx, plan, self._inputs)
+
+    def _lift(self, other) -> "LazyFrame":
+        if isinstance(other, LazyFrame):
+            assert other._ctx is self._ctx, "frames must share a DistContext"
+            return other
+        return LazyFrame.scan(self._ctx, other)
+
+    def _merge(self, other: "LazyFrame"):
+        """Union the two input lists (dedup by table identity) and remap the
+        other plan's Scan slots into the merged numbering."""
+        inputs = list(self._inputs)
+        mapping = {}
+        for i, t in enumerate(other._inputs):
+            for j, s in enumerate(inputs):
+                if s is t:
+                    mapping[i] = j
+                    break
+            else:
+                mapping[i] = len(inputs)
+                inputs.append(t)
+        return tuple(inputs), PL.remap_scans(other._plan, mapping)
+
+    # -- operators (each returns a new frame) ---------------------------------
+    def select(self, predicate: Callable[[dict], jax.Array], *, key=None
+               ) -> "LazyFrame":
+        """Filter rows. ``key``: hashable cache key for the predicate —
+        required for the fused program to be jit-cached across calls, and
+        it must cover any values the predicate captures (closure state is
+        invisible to the cache; predicate CODE is fingerprinted)."""
+        return self._chain(PL.Select(self._plan, predicate, key=key))
+
+    def project(self, columns: Sequence[str]) -> "LazyFrame":
+        return self._chain(PL.Project(self._plan, tuple(columns)))
+
+    def limit(self, n: int) -> "LazyFrame":
+        """Per-shard head(n) (local truncation; global total <= shards*n)."""
+        return self._chain(PL.Limit(self._plan, int(n)))
+
+    def partition_by(self, keys, *, seed: int = 7, bucket_capacity=None
+                     ) -> "LazyFrame":
+        keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
+        return self._chain(PL.Repartition(self._plan, keys_t, seed=seed,
+                                          bucket_capacity=bucket_capacity))
+
+    def join(self, other, on, *, how: str = "inner", algorithm: str = "sort",
+             bucket_capacity=None, out_capacity=None, seed: int = 7
+             ) -> "LazyFrame":
+        other = self._lift(other)
+        inputs, rplan = self._merge(other)
+        on_t = (on,) if isinstance(on, str) else tuple(on)
+        node = PL.Join(self._plan, rplan, on_t, how=how, algorithm=algorithm,
+                       bucket_capacity=bucket_capacity,
+                       out_capacity=out_capacity, seed=seed)
+        return LazyFrame(self._ctx, node, inputs)
+
+    def groupby(self, keys, aggs, *, strategy: str = "two_phase",
+                bucket_capacity=None, partial_capacity=None,
+                out_capacity=None, seed: int = 7) -> "LazyFrame":
+        keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
+        pairs = A.normalize_aggs(aggs)
+        node = PL.GroupBy(self._plan, keys_t, pairs, strategy=strategy,
+                          bucket_capacity=bucket_capacity,
+                          partial_capacity=partial_capacity,
+                          out_capacity=out_capacity, seed=seed)
+        return self._chain(node)
+
+    def sort(self, by, *, bucket_capacity=None, samples_per_shard: int = 64
+             ) -> "LazyFrame":
+        by_t = (by,) if isinstance(by, str) else tuple(by)
+        return self._chain(PL.Sort(self._plan, by_t,
+                                   bucket_capacity=bucket_capacity,
+                                   samples_per_shard=samples_per_shard))
+
+    def union(self, other, *, bucket_capacity=None, seed: int = 7
+              ) -> "LazyFrame":
+        other = self._lift(other)
+        inputs, rplan = self._merge(other)
+        return LazyFrame(self._ctx, PL.Union(
+            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed),
+            inputs)
+
+    def intersect(self, other, *, bucket_capacity=None, seed: int = 7
+                  ) -> "LazyFrame":
+        other = self._lift(other)
+        inputs, rplan = self._merge(other)
+        return LazyFrame(self._ctx, PL.Intersect(
+            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed),
+            inputs)
+
+    def difference(self, other, *, mode: str = "symmetric",
+                   bucket_capacity=None, seed: int = 7) -> "LazyFrame":
+        other = self._lift(other)
+        inputs, rplan = self._merge(other)
+        return LazyFrame(self._ctx, PL.Difference(
+            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed,
+            mode=mode), inputs)
+
+    def distinct(self, *, bucket_capacity=None, seed: int = 7) -> "LazyFrame":
+        return self._chain(PL.Distinct(self._plan,
+                                       bucket_capacity=bucket_capacity,
+                                       seed=seed))
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def schema(self) -> dict[str, jax.ShapeDtypeStruct]:
+        an = PL._Analysis([t.schema for t in self._inputs])
+        return an.schema(self._plan)
+
+    def logical_plan(self) -> PL.Node:
+        return self._plan
+
+    def optimized(self) -> PL.Node:
+        """The plan after all optimizer passes (what collect() executes)."""
+        return PL.optimize(self._plan, [t.schema for t in self._inputs],
+                           self._ctx.num_shards)
+
+    def explain(self, *, optimize: bool = True) -> str:
+        plan = self.optimized() if optimize else self._plan
+        return PL.explain(plan)
+
+    def plan_report(self) -> list[dict]:
+        """Static shuffle accounting of the optimized plan — one record per
+        potential AllToAll (elided flag, bucket, bytes/row, dense wire
+        bytes). Dry-runs the compiled body under ``jax.eval_shape``; no
+        data moves and nothing executes."""
+        ctx = self._ctx
+        plan = self.optimized()
+        report: list[dict] = []
+
+        def body(*tables):
+            return PL.execute_plan(plan, tables, axis_name=ctx.axis_name,
+                                   num_shards=ctx.num_shards, report=report)
+
+        args = tuple((t.columns, t.row_counts) for t in self._inputs)
+        jax.eval_shape(ctx._make_global(body), *args)
+        return report
+
+    # -- execution ------------------------------------------------------------
+    def collect_with_stats(self):
+        """Run the fused program; returns (DistTable, per-shuffle stats)."""
+        return self._ctx._run_plan(self._plan, self._inputs, optimize=True)
+
+    def collect(self) -> DistTable:
+        """Optimize + compile + run the whole chain as one shard_map program."""
+        out, _ = self.collect_with_stats()
+        return out

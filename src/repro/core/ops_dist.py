@@ -2,13 +2,23 @@
 
 Each function here runs **inside** ``shard_map`` over the shuffle axis —
 the BSP worker program of the paper. ``repro.core.context.DistContext``
-provides the user-facing wrappers that build the shard_map/jit around them.
+provides the user-facing wrappers that build the shard_map/jit around them,
+and ``repro.core.plan`` fuses whole chains of them into one body.
 
 Composition table (paper §II-B):
   select/project      : pleasingly parallel, no network
   join                : hash_partition(key) -> AllToAll -> local join
   union/intersect/diff: hash_partition(whole row) -> AllToAll -> local op
   sort (global)       : sample splitters -> range partition -> local sort
+
+Shuffle elision: every operator takes ``skip_*_shuffle`` flags. When the
+plan optimizer proves an input is already hash-partitioned on the operator's
+keys (same seed, same modulus — the :class:`~repro.core.repartition.
+Partitioning` tag), the AllToAll is skipped and a zero :class:`ShuffleStats`
+is emitted in its place, so stats shapes stay stable either way. The
+optional ``report`` list collects one static record per potential shuffle
+(bucket, bytes/row, dense wire bytes) at trace time — the fused-vs-eager
+accounting surfaced by ``benchmarks/bench_plan``.
 """
 from __future__ import annotations
 
@@ -19,15 +29,68 @@ import jax.numpy as jnp
 
 from repro.core import ops_agg as A
 from repro.core import ops_local as L
-from repro.core.repartition import ShuffleStats, repartition
+from repro.core.repartition import (ShuffleStats, repartition,
+                                    zero_shuffle_stats)
 from repro.core.table import Table
-from repro.kernels import ops as kops
 from repro.utils import axis_size
 
 
 def _row_pid(table: Table, key_columns: Sequence[str], p: int, seed: int):
     pid, _ = L.hash_partition(table, key_columns, p, seed=seed)
     return pid
+
+
+def _row_bytes(table: Table) -> int:
+    """Bytes per row of the dense wire format (all columns, all payload)."""
+    total = 0
+    for v in table.columns.values():
+        n = 1
+        for d in v.shape[1:]:
+            n *= d
+        total += n * v.dtype.itemsize
+    return total
+
+
+def _shuffle(table: Table, keys: Sequence[str], *, axis_name: str,
+             bucket_capacity: int, seed: int, skip: bool = False,
+             report: list | None = None, label: str = "shuffle",
+             pid=None) -> tuple[Table, ShuffleStats]:
+    """Hash-partition + AllToAll, or the elided identity when ``skip``.
+
+    One record per call lands in ``report`` (at trace time): the dense
+    AllToAll ships ``p^2 * bucket * row_bytes`` regardless of row validity,
+    so the wire volume is static — 0 when the shuffle is elided.
+    """
+    p = axis_size(axis_name)
+    rb = _row_bytes(table)
+    if report is not None:
+        report.append({
+            "op": label, "elided": bool(skip), "row_bytes": rb,
+            "bucket": 0 if skip else bucket_capacity,
+            "wire_bytes": 0 if skip else p * p * bucket_capacity * rb,
+        })
+    if skip:
+        return table, zero_shuffle_stats()
+    if pid is None:
+        pid = _row_pid(table, list(keys), p, seed)
+    return repartition(table, pid, axis_name=axis_name,
+                       bucket_capacity=bucket_capacity)
+
+
+def dist_repartition_by(table: Table, keys: Sequence[str] | str, *,
+                        axis_name: str, bucket_capacity: int, seed: int = 7,
+                        skip_shuffle: bool = False, report: list | None = None):
+    """Explicit hash repartition — pre-partition once, elide shuffles later.
+
+    The caller (DistContext / LazyFrame) tags the result with the matching
+    :class:`Partitioning`, making every subsequent join/groupby on ``keys``
+    with the same seed a shuffle-free local operator.
+    """
+    keys_l = [keys] if isinstance(keys, str) else list(keys)
+    out, st = _shuffle(table, keys_l, axis_name=axis_name,
+                       bucket_capacity=bucket_capacity, seed=seed,
+                       skip=skip_shuffle, report=report, label="repartition")
+    return out, (st,)
 
 
 def dist_join(
@@ -41,53 +104,69 @@ def dist_join(
     algorithm: str = "sort",
     out_capacity: int | None = None,
     seed: int = 7,
+    shuffle_seed: int | None = None,
+    skip_left_shuffle: bool = False,
+    skip_right_shuffle: bool = False,
+    report: list | None = None,
 ):
     """Distributed join = shuffle both sides by key hash, then local join.
 
     Rows with equal keys land on the same shard (same hash, same modulus),
-    so the local join of the repartitioned tables is exact.
+    so the local join of the repartitioned tables is exact. A side whose
+    ``skip_*_shuffle`` flag is set is trusted to already be partitioned on
+    ``on`` with ``shuffle_seed`` — the co-partitioned fast path.
     """
     on_l = [on] if isinstance(on, str) else list(on)
-    p = axis_size(axis_name)
-    left2, st_l = repartition(
-        left, _row_pid(left, on_l, p, seed), axis_name=axis_name,
-        bucket_capacity=bucket_capacity)
-    right2, st_r = repartition(
-        right, _row_pid(right, on_l, p, seed), axis_name=axis_name,
-        bucket_capacity=bucket_capacity)
+    ps = seed if shuffle_seed is None else shuffle_seed
+    left2, st_l = _shuffle(left, on_l, axis_name=axis_name,
+                           bucket_capacity=bucket_capacity, seed=ps,
+                           skip=skip_left_shuffle, report=report,
+                           label="join.left")
+    right2, st_r = _shuffle(right, on_l, axis_name=axis_name,
+                            bucket_capacity=bucket_capacity, seed=ps,
+                            skip=skip_right_shuffle, report=report,
+                            label="join.right")
     out = L.join(left2, right2, on_l, how=how, algorithm=algorithm,
                  out_capacity=out_capacity, seed=seed + 1)
     return out, (st_l, st_r)
 
 
 def _dist_set_op(a: Table, b: Table, op, *, axis_name: str, bucket_capacity: int,
-                 seed: int = 7, **kw):
+                 seed: int = 7, skip_left_shuffle: bool = False,
+                 skip_right_shuffle: bool = False, report: list | None = None,
+                 label: str = "set_op", **kw):
     """Shuffle by whole-row hash (paper §II-B-4) so duplicates colocate."""
     names = a.column_names
-    p = axis_size(axis_name)
-    a2, st_a = repartition(a, _row_pid(a, names, p, seed), axis_name=axis_name,
-                           bucket_capacity=bucket_capacity)
-    b2, st_b = repartition(b, _row_pid(b, names, p, seed), axis_name=axis_name,
-                           bucket_capacity=bucket_capacity)
+    a2, st_a = _shuffle(a, names, axis_name=axis_name,
+                        bucket_capacity=bucket_capacity, seed=seed,
+                        skip=skip_left_shuffle, report=report,
+                        label=f"{label}.left")
+    b2, st_b = _shuffle(b, names, axis_name=axis_name,
+                        bucket_capacity=bucket_capacity, seed=seed,
+                        skip=skip_right_shuffle, report=report,
+                        label=f"{label}.right")
     return op(a2, b2, **kw), (st_a, st_b)
 
 
 def dist_union(a: Table, b: Table, **kw):
-    return _dist_set_op(a, b, L.union, **kw)
+    return _dist_set_op(a, b, L.union, label="union", **kw)
 
 
 def dist_intersect(a: Table, b: Table, **kw):
-    return _dist_set_op(a, b, L.intersect, **kw)
+    return _dist_set_op(a, b, L.intersect, label="intersect", **kw)
 
 
 def dist_difference(a: Table, b: Table, *, mode: str = "symmetric", **kw):
-    return _dist_set_op(a, b, lambda x, y: L.difference(x, y, mode=mode), **kw)
+    return _dist_set_op(a, b, lambda x, y: L.difference(x, y, mode=mode),
+                        label="difference", **kw)
 
 
-def dist_distinct(a: Table, *, axis_name: str, bucket_capacity: int, seed: int = 7):
-    p = axis_size(axis_name)
-    a2, st = repartition(a, _row_pid(a, a.column_names, p, seed),
-                         axis_name=axis_name, bucket_capacity=bucket_capacity)
+def dist_distinct(a: Table, *, axis_name: str, bucket_capacity: int,
+                  seed: int = 7, skip_shuffle: bool = False,
+                  report: list | None = None):
+    a2, st = _shuffle(a, a.column_names, axis_name=axis_name,
+                      bucket_capacity=bucket_capacity, seed=seed,
+                      skip=skip_shuffle, report=report, label="distinct")
     return L.distinct(a2), (st,)
 
 
@@ -102,6 +181,9 @@ def dist_groupby(
     partial_capacity: int | None = None,
     out_capacity: int | None = None,
     seed: int = 7,
+    shuffle_seed: int | None = None,
+    skip_shuffle: bool = False,
+    report: list | None = None,
 ):
     """Distributed GroupBy — both strategies of arXiv:2010.14596.
 
@@ -114,58 +196,111 @@ def dist_groupby(
       low-cardinality keys this moves far fewer bytes, and the AllToAll's
       ``bucket_capacity`` can shrink to ~cardinality/shards.
 
+    ``skip_shuffle``: the input is already partitioned on ``keys`` — every
+    key lives on exactly one shard, so a plain local groupby IS the global
+    result for either strategy (zero wire traffic).
+
     ``partial_capacity`` optionally trims the phase-1 partial table (must
     bound the per-shard key cardinality; overflow truncates like join).
     Both strategies produce identical results: one global row per key.
     """
     keys_l = [keys] if isinstance(keys, str) else list(keys)
     pairs = A.normalize_aggs(aggs)
-    p = axis_size(axis_name)
+    ps = seed if shuffle_seed is None else shuffle_seed
+    if skip_shuffle:
+        _, st = _shuffle(table, keys_l, axis_name=axis_name,
+                         bucket_capacity=bucket_capacity, seed=ps, skip=True,
+                         report=report, label=f"groupby.{strategy}")
+        return A.groupby(table, keys_l, pairs, out_capacity=out_capacity), (st,)
     if strategy == "shuffle":
-        t2, st = repartition(table, _row_pid(table, keys_l, p, seed),
-                             axis_name=axis_name,
-                             bucket_capacity=bucket_capacity)
+        t2, st = _shuffle(table, keys_l, axis_name=axis_name,
+                          bucket_capacity=bucket_capacity, seed=ps,
+                          report=report, label="groupby.shuffle")
         return A.groupby(t2, keys_l, pairs, out_capacity=out_capacity), (st,)
     if strategy == "two_phase":
         part = A.partial_groupby(table, keys_l, pairs,
                                  out_capacity=partial_capacity)
-        part2, st = repartition(part, _row_pid(part, keys_l, p, seed),
-                                axis_name=axis_name,
-                                bucket_capacity=bucket_capacity)
+        part2, st = _shuffle(part, keys_l, axis_name=axis_name,
+                             bucket_capacity=bucket_capacity, seed=ps,
+                             report=report, label="groupby.two_phase")
         return A.combine_groupby(part2, keys_l, pairs,
                                  out_capacity=out_capacity), (st,)
     raise ValueError(strategy)
 
 
+def _lex_splitter_pids(table: Table, by: Sequence[str], *, axis_name: str,
+                       samples_per_shard: int) -> jax.Array:
+    """Sampled range partition over one or more key columns.
+
+    Each key column maps through the order-preserving ``ordered_u32``
+    transform; splitter *tuples* come from a global lexicographic sort of
+    the per-shard samples. Row destinations generalize ``searchsorted(...,
+    side='right')``: ``pid[r] = #{s : splitter_s <= row_r}`` under
+    lexicographic order — computed against the (num_shards-1) splitters by
+    a short comparison cascade, which sidesteps packing multi-key tuples
+    into a single wide integer (no uint64 without x64 on this stack).
+    """
+    p = axis_size(axis_name)
+    valid = table.valid_mask()
+    c = table.capacity
+    stride = max(1, c // samples_per_shard)
+
+    row_keys, samples = [], []
+    for k in by:
+        ku = L.ordered_u32(table.columns[k])
+        row_keys.append(ku)
+        # stride-sample this shard's keys (max-sentinel where invalid, so
+        # garbage rows sort to the tail of the global sample)
+        samp = jnp.where(valid, ku, jnp.uint32(0xFFFFFFFF))
+        samples.append(samp[::stride][:samples_per_shard])
+    gathered = tuple(jax.lax.all_gather(s, axis_name).reshape(-1)
+                     for s in samples)
+    ordered = jax.lax.sort(gathered, num_keys=len(gathered))
+    if not isinstance(ordered, (tuple, list)):
+        ordered = (ordered,)
+    # p-1 splitter tuples at even quantiles of the global sample
+    n_s = ordered[0].shape[0]
+    qs = (jnp.arange(1, p) * n_s) // p
+    splitters = [col[qs] for col in ordered]  # each (p-1,)
+
+    # lexicographic splitter <= row, per (splitter, row) pair
+    lt = jnp.zeros((p - 1, c), bool)
+    eq = jnp.ones((p - 1, c), bool)
+    for s, r in zip(splitters, row_keys):
+        s2, r2 = s[:, None], r[None, :]
+        lt = lt | (eq & (s2 < r2))
+        eq = eq & (s2 == r2)
+    le = lt | eq
+    pid = jnp.sum(le.astype(jnp.int32), axis=0)
+    return jnp.where(valid, pid, -1)
+
+
 def dist_sort(
     table: Table,
-    by: str,
+    by: Sequence[str] | str,
     *,
     axis_name: str,
     bucket_capacity: int,
     samples_per_shard: int = 64,
+    skip_shuffle: bool = False,
+    report: list | None = None,
 ):
     """Global sort: sampled range partition, then local sort per shard.
 
+    ``by`` may name several key columns — splitters are then lexicographic
+    tuples, so the global order is the multi-column lexicographic order.
     Output ordering: shard i holds keys <= shard i+1's keys; each shard is
     locally sorted — the standard distributed sort contract.
     """
-    p = axis_size(axis_name)
-    key = table.columns[by]
-    valid = table.valid_mask()
-    sentinel = kops.key_max(key.dtype)
-    # stride-sample this shard's keys (sentinel where invalid)
-    c = table.capacity
-    stride = max(1, c // samples_per_shard)
-    samp = jnp.where(valid, key, sentinel)[::stride][:samples_per_shard]
-    all_samp = jax.lax.all_gather(samp, axis_name).reshape(-1)
-    all_samp = jnp.sort(all_samp)
-    # p-1 splitters at even quantiles of the sample
-    n_s = all_samp.shape[0]
-    qs = (jnp.arange(1, p) * n_s) // p
-    splitters = all_samp[qs]
-    pid = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
-    pid = jnp.where(valid, pid, -1)
-    out, st = repartition(table, pid, axis_name=axis_name,
-                          bucket_capacity=bucket_capacity)
-    return L.sort_by(out, by), (st,)
+    by_l = [by] if isinstance(by, str) else list(by)
+    if skip_shuffle:  # single shard (or provably range-partitioned already)
+        _, st = _shuffle(table, by_l, axis_name=axis_name,
+                         bucket_capacity=bucket_capacity, seed=0, skip=True,
+                         report=report, label="sort")
+        return L.sort_by(table, by_l), (st,)
+    pid = _lex_splitter_pids(table, by_l, axis_name=axis_name,
+                             samples_per_shard=samples_per_shard)
+    out, st = _shuffle(table, by_l, axis_name=axis_name,
+                       bucket_capacity=bucket_capacity, seed=0, pid=pid,
+                       report=report, label="sort")
+    return L.sort_by(out, by_l), (st,)

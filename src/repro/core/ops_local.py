@@ -65,7 +65,7 @@ def head(table: Table, n: int) -> Table:
 # ---------------------------------------------------------------------------
 
 
-def _ordered_u32(x: jax.Array) -> jax.Array:
+def ordered_u32(x: jax.Array) -> jax.Array:
     """Order-preserving map to uint32 (for the bitonic kernel path)."""
     if x.dtype == jnp.uint32:
         return x
@@ -97,7 +97,7 @@ def sort_permutation(
         and keys[0].dtype in (jnp.int32, jnp.uint32, jnp.float32)
     )
     if use_bitonic and len(keys) == 1:
-        ku = _ordered_u32(keys[0])
+        ku = ordered_u32(keys[0])
         # invalid rows -> max sentinel; the kernel's (key, iota) lexicographic
         # tie-break sorts them after valid max-key rows (front-compaction
         # guarantees invalid rows have larger original indices).

@@ -1,0 +1,764 @@
+"""Lazy logical-plan IR + fusing optimizer: one shard_map program per pipeline.
+
+Cylon's core claim (paper §II) is that relational operators *compose* into a
+single efficient distributed program; the follow-up operator-pattern algebra
+(arXiv:2209.06146) makes that composition explicit. This module is that
+composition layer for the JAX adaptation: a small IR of relational nodes, a
+rule-based optimizer, and a compiler that evaluates the whole optimized plan
+inside ONE ``shard_map`` body — so a four-operator ETL chain is one XLA
+dispatch, not four, with no full-capacity ``DistTable`` materialization
+between operators.
+
+Optimizer passes (applied in order by :func:`optimize`):
+
+1. **Predicate column probing** — run each ``Select`` predicate once over
+   tiny zero-filled columns behind a recording mapping to learn which
+   columns it reads (its pushdown footprint). Predicates that defeat the
+   probe are conservatively pinned in place.
+2. **Predicate pushdown** — move a ``Select`` below ``Project``/``Sort``/
+   ``Repartition`` and into the side of a ``Join`` whose columns it reads
+   (inner/left joins push left, inner/right push right), so rows are
+   dropped *before* they cross the AllToAll.
+3. **Projection pushdown** — insert ``Project`` nodes under every shuffle
+   boundary (join/groupby/sort/repartition inputs) keeping only the columns
+   the rest of the plan consumes, shrinking bytes/row on the wire.
+4. **Shuffle elision** — thread :class:`~repro.core.repartition.Partitioning`
+   tags bottom-up; an input already hash-partitioned on an operator's keys
+   (same seed, same modulus) has its AllToAll elided. A single-shard mesh
+   elides every shuffle (hash to one partition is the identity).
+
+The canonicalized plan (:func:`canonical_key`) is the jit-cache key, so a
+pipeline re-collected every training step compiles exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops_dist as D
+from repro.core import ops_local as L
+from repro.core.repartition import Partitioning, default_bucket_capacity
+from repro.core.table import Table
+
+# ---------------------------------------------------------------------------
+# IR nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Node:
+    """Base class of plan IR nodes (immutable, structurally comparable)."""
+
+
+@dataclass(frozen=True)
+class Scan(Node):
+    """Leaf: the ``slot``-th input DistTable of the compiled program."""
+
+    slot: int
+    partitioning: Partitioning | None = None
+
+
+@dataclass(frozen=True)
+class Select(Node):
+    """Row filter by a user predicate over the columns dict.
+
+    ``key``: user-supplied hashable cache key for the predicate — without
+    it the plan cannot be canonicalized and recompiles on every execution
+    (the pre-existing eager ``ctx.select`` behaviour, now opt-out).
+    ``columns``: the predicate's probed column footprint (filled by the
+    optimizer; None = unknown, treat as reading everything).
+    """
+
+    child: Node
+    predicate: Callable = field(compare=False)
+    key: object = None
+    columns: tuple[str, ...] | None = None
+
+
+@dataclass(frozen=True)
+class Project(Node):
+    child: Node
+    columns: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class Limit(Node):
+    """Per-shard head(n) — local truncation, no cross-shard coordination."""
+
+    child: Node
+    n: int
+
+
+@dataclass(frozen=True)
+class Repartition(Node):
+    """Explicit hash repartition on ``keys`` — pre-partition once so later
+    joins/groupbys on the same keys (and seed) elide their shuffles."""
+
+    child: Node
+    keys: tuple[str, ...]
+    seed: int = 7
+    bucket_capacity: int | None = None
+    skip_shuffle: bool = False
+
+
+@dataclass(frozen=True)
+class Join(Node):
+    left: Node
+    right: Node
+    on: tuple[str, ...]
+    how: str = "inner"
+    algorithm: str = "sort"
+    bucket_capacity: int | None = None
+    out_capacity: int | None = None
+    seed: int = 7
+    shuffle_seed: int | None = None  # resolved by the optimizer
+    skip_left_shuffle: bool = False
+    skip_right_shuffle: bool = False
+
+
+@dataclass(frozen=True)
+class GroupBy(Node):
+    child: Node
+    keys: tuple[str, ...]
+    pairs: tuple[tuple[str, str], ...]  # normalized (col, op) aggregations
+    strategy: str = "two_phase"
+    bucket_capacity: int | None = None
+    partial_capacity: int | None = None
+    out_capacity: int | None = None
+    seed: int = 7
+    shuffle_seed: int | None = None
+    skip_shuffle: bool = False
+
+
+@dataclass(frozen=True)
+class Sort(Node):
+    child: Node
+    by: tuple[str, ...]
+    bucket_capacity: int | None = None
+    samples_per_shard: int = 64
+    skip_shuffle: bool = False
+
+
+@dataclass(frozen=True)
+class SetOp(Node):
+    """Shared shape of the whole-row-hash binary operators."""
+
+    left: Node
+    right: Node
+    bucket_capacity: int | None = None
+    seed: int = 7
+    mode: str = "symmetric"  # Difference only
+    skip_left_shuffle: bool = False
+    skip_right_shuffle: bool = False
+
+
+@dataclass(frozen=True)
+class Union(SetOp):
+    pass
+
+
+@dataclass(frozen=True)
+class Intersect(SetOp):
+    pass
+
+
+@dataclass(frozen=True)
+class Difference(SetOp):
+    pass
+
+
+@dataclass(frozen=True)
+class Distinct(Node):
+    child: Node
+    bucket_capacity: int | None = None
+    seed: int = 7
+    skip_shuffle: bool = False
+
+
+def children(node: Node) -> tuple[Node, ...]:
+    if isinstance(node, Scan):
+        return ()
+    if isinstance(node, (Join, SetOp)):
+        return (node.left, node.right)
+    return (node.child,)
+
+
+def _with_children(node: Node, kids: Sequence[Node]) -> Node:
+    if isinstance(node, Scan):
+        return node
+    if isinstance(node, (Join, SetOp)):
+        return replace(node, left=kids[0], right=kids[1])
+    return replace(node, child=kids[0])
+
+
+def remap_scans(node: Node, mapping: dict[int, int]) -> Node:
+    """Renumber Scan slots (merging two frames' input lists into one)."""
+    if isinstance(node, Scan):
+        return replace(node, slot=mapping[node.slot])
+    return _with_children(node, [remap_scans(c, mapping)
+                                 for c in children(node)])
+
+
+# ---------------------------------------------------------------------------
+# schema inference
+# ---------------------------------------------------------------------------
+
+JOIN_SUFFIX = "_r"  # ops_local.join's clash suffix, mirrored here
+
+
+class _Analysis:
+    """Memoized per-node output schema (name -> ShapeDtypeStruct of one row's
+    trailing shape). Memo keys are node identities; node refs are held so
+    ids cannot be recycled mid-pass."""
+
+    def __init__(self, input_schemas: Sequence[dict]):
+        self.inputs = [dict(s) for s in input_schemas]
+        self._memo: dict[int, tuple[Node, dict]] = {}
+
+    def schema(self, node: Node) -> dict:
+        hit = self._memo.get(id(node))
+        if hit is not None and hit[0] is node:
+            return hit[1]
+        out = self._schema(node)
+        self._memo[id(node)] = (node, out)
+        return out
+
+    def _schema(self, node: Node) -> dict:
+        if isinstance(node, Scan):
+            return dict(self.inputs[node.slot])
+        if isinstance(node, Project):
+            ch = self.schema(node.child)
+            return {k: ch[k] for k in node.columns}
+        if isinstance(node, Join):
+            lsch = self.schema(node.left)
+            rsch = self.schema(node.right)
+            out = dict(lsch)
+            for k, v in rsch.items():
+                out[k + JOIN_SUFFIX if k in lsch else k] = v
+            return out
+        if isinstance(node, GroupBy):
+            ch = self.schema(node.child)
+            out = {k: ch[k] for k in node.keys}
+            f32 = jnp.dtype(jnp.float32)
+            for col, op in node.pairs:
+                base = ch[col]
+                if op in ("mean", "var"):
+                    sds = jax.ShapeDtypeStruct(base.shape, f32)
+                elif op == "count":
+                    sds = jax.ShapeDtypeStruct((), jnp.dtype(jnp.int32))
+                else:
+                    sds = base
+                out[f"{col}_{op}"] = sds
+            return out
+        # Select / Limit / Sort / Distinct / Repartition / set ops: unchanged
+        return dict(self.schema(children(node)[0]))
+
+
+# ---------------------------------------------------------------------------
+# optimizer pass 1: predicate column probing
+# ---------------------------------------------------------------------------
+
+
+class _RecordingColumns(dict):
+    """Columns dict that records which names a predicate reads."""
+
+    def __init__(self, cols: dict):
+        super().__init__(cols)
+        self.accessed: set[str] = set()
+
+    def __getitem__(self, k):
+        self.accessed.add(k)
+        return super().__getitem__(k)
+
+    def get(self, k, default=None):
+        self.accessed.add(k)
+        return super().get(k, default)
+
+
+def probe_predicate(predicate: Callable, schema: dict) -> tuple[str, ...] | None:
+    """Learn a predicate's column footprint by running it over zeros.
+
+    Returns the sorted accessed-column tuple, or None when the probe fails
+    (exception, or no recorded access — e.g. the predicate iterates the
+    dict), which pins the Select in place during pushdown.
+    """
+    cols = _RecordingColumns({
+        k: jnp.zeros((2,) + tuple(s.shape), s.dtype) for k, s in schema.items()
+    })
+    try:
+        out = predicate(cols)
+        _ = jnp.shape(out)  # must be array-like
+    except Exception:  # noqa: BLE001 — any failure disables pushdown only
+        return None
+    return tuple(sorted(cols.accessed)) or None
+
+
+def _annotate_selects(node: Node, an: _Analysis) -> Node:
+    kids = [_annotate_selects(c, an) for c in children(node)]
+    node = _with_children(node, kids)
+    if isinstance(node, Select) and node.columns is None:
+        cols = probe_predicate(node.predicate, an.schema(node.child))
+        if cols is not None:
+            node = replace(node, columns=cols)
+    return node
+
+
+# ---------------------------------------------------------------------------
+# optimizer pass 2: predicate pushdown (filter before shuffle)
+# ---------------------------------------------------------------------------
+
+
+def _pushdown_selects(node: Node, an: _Analysis) -> Node:
+    kids = [_pushdown_selects(c, an) for c in children(node)]
+    node = _with_children(node, kids)
+    if not isinstance(node, Select) or node.columns is None:
+        return node
+    refs = set(node.columns)
+    ch = node.child
+    if isinstance(ch, Project) and refs <= set(ch.columns):
+        return replace(ch, child=_pushdown_selects(
+            replace(node, child=ch.child), an))
+    if isinstance(ch, (Sort, Repartition)):
+        return replace(ch, child=_pushdown_selects(
+            replace(node, child=ch.child), an))
+    if isinstance(ch, Join):
+        lnames = set(an.schema(ch.left))
+        rnames = set(an.schema(ch.right))
+        # pushing a one-sided filter through an outer join changes which
+        # rows of the OTHER side surface as unmatched — only inner/left
+        # joins admit a left push, inner/right a right push.
+        if refs <= lnames and ch.how in ("inner", "left"):
+            return replace(ch, left=_pushdown_selects(
+                replace(node, child=ch.left), an))
+        if refs <= rnames and not (refs & lnames) and ch.how in ("inner",
+                                                                 "right"):
+            return replace(ch, right=_pushdown_selects(
+                replace(node, child=ch.right), an))
+    return node
+
+
+# ---------------------------------------------------------------------------
+# optimizer pass 3: projection pushdown (narrow rows before shuffle)
+# ---------------------------------------------------------------------------
+
+
+def _project_to(child: Node, cols: set[str], an: _Analysis) -> Node:
+    """Project ``child`` down to ``cols`` (child-schema order) if narrower."""
+    sch = an.schema(child)
+    if set(sch) == cols:
+        return child
+    ordered = tuple(k for k in sch if k in cols)
+    if isinstance(child, Project):
+        return replace(child, columns=ordered)
+    return Project(child, ordered)
+
+
+def _pushdown_projections(node: Node, needed: set[str] | None,
+                          an: _Analysis) -> Node:
+    if isinstance(node, Scan):
+        return node
+    if isinstance(node, Project):
+        return replace(node, child=_pushdown_projections(
+            node.child, set(node.columns), an))
+    if isinstance(node, Select):
+        child_needed = (None if (needed is None or node.columns is None)
+                        else needed | set(node.columns))
+        return replace(node, child=_pushdown_projections(
+            node.child, child_needed, an))
+    if isinstance(node, Limit):
+        return replace(node, child=_pushdown_projections(node.child, needed,
+                                                         an))
+    if isinstance(node, (Sort, Repartition)):
+        keys = set(node.by if isinstance(node, Sort) else node.keys)
+        cn = None if needed is None else needed | keys
+        child = _pushdown_projections(node.child, cn, an)
+        if cn is not None:
+            child = _project_to(child, cn & set(an.schema(child)) | keys, an)
+        return replace(node, child=child)
+    if isinstance(node, Join):
+        lsch = an.schema(node.left)
+        rsch = an.schema(node.right)
+        need_out = set(an.schema(node)) if needed is None else set(needed)
+        ln = {k for k in lsch if k in need_out} | set(node.on)
+        rn = set(node.on)
+        for k in rsch:
+            if (k + JOIN_SUFFIX if k in lsch else k) in need_out:
+                rn.add(k)
+                if k in lsch:
+                    # a consumed '<k>_r' only gets its suffix while the
+                    # name still CLASHES — keep the left copy alive even
+                    # if nothing upstream reads it
+                    ln.add(k)
+        left = _project_to(_pushdown_projections(node.left, ln, an), ln, an)
+        right = _project_to(_pushdown_projections(node.right, rn, an), rn, an)
+        return replace(node, left=left, right=right)
+    if isinstance(node, GroupBy):
+        cn = set(node.keys) | {c for c, _ in node.pairs}
+        child = _project_to(_pushdown_projections(node.child, cn, an), cn, an)
+        return replace(node, child=child)
+    # set ops & distinct compare whole rows: every child column is load-
+    # bearing, nothing can be dropped below them.
+    kids = [_pushdown_projections(c, None, an) for c in children(node)]
+    return _with_children(node, kids)
+
+
+# ---------------------------------------------------------------------------
+# optimizer pass 4: shuffle elision via Partitioning tags
+# ---------------------------------------------------------------------------
+
+
+def _elide(node: Node, p: int, an: _Analysis
+           ) -> tuple[Node, Partitioning | None]:
+    if isinstance(node, Scan):
+        part = node.partitioning
+        if part is not None and part.num_partitions != p:
+            part = None
+        return node, part
+    if isinstance(node, Select):
+        c, cp = _elide(node.child, p, an)
+        return replace(node, child=c), cp
+    if isinstance(node, Project):
+        c, cp = _elide(node.child, p, an)
+        keep = cp if cp is not None and set(cp.keys) <= set(node.columns) \
+            else None
+        return replace(node, child=c), keep
+    if isinstance(node, Limit):
+        c, cp = _elide(node.child, p, an)
+        return replace(node, child=c), cp
+    if isinstance(node, Repartition):
+        c, cp = _elide(node.child, p, an)
+        target = Partitioning(node.keys, p, node.seed)
+        skip = p == 1 or cp == target
+        return replace(node, child=c, skip_shuffle=skip), target
+    if isinstance(node, Join):
+        l, lp = _elide(node.left, p, an)
+        r, rp = _elide(node.right, p, an)
+        # inner/left outputs keep true key values on their hash shard;
+        # right/full emit unmatched-side rows whose (left-sourced) key
+        # columns are zero-filled, so NO placement tag survives them.
+        def out_part(seed):
+            if node.how in ("inner", "left"):
+                return Partitioning(node.on, p, seed)
+            return None
+        if p == 1:
+            out = replace(node, left=l, right=r, skip_left_shuffle=True,
+                          skip_right_shuffle=True, shuffle_seed=node.seed)
+            return out, out_part(node.seed)
+        target = None
+        if lp is not None and lp.keys == node.on:
+            target = lp
+        elif rp is not None and rp.keys == node.on:
+            target = rp
+        if target is None:
+            target = Partitioning(node.on, p, node.seed)
+        out = replace(node, left=l, right=r, skip_left_shuffle=lp == target,
+                      skip_right_shuffle=rp == target,
+                      shuffle_seed=target.seed)
+        return out, out_part(target.seed)
+    if isinstance(node, GroupBy):
+        c, cp = _elide(node.child, p, an)
+        # any hash partitioning on exactly the group keys colocates each
+        # key on one shard — seed-independent, unlike the join fast path
+        matches = cp is not None and cp.keys == node.keys
+        if p == 1 or matches:
+            out = replace(node, child=c, skip_shuffle=True,
+                          shuffle_seed=node.seed)
+            return out, cp if matches else Partitioning(node.keys, p,
+                                                        node.seed)
+        out = replace(node, child=c, shuffle_seed=node.seed)
+        return out, Partitioning(node.keys, p, node.seed)
+    if isinstance(node, Sort):
+        c, _ = _elide(node.child, p, an)
+        # range partitioning is data-dependent: no hash tag survives
+        return replace(node, child=c, skip_shuffle=p == 1), None
+    if isinstance(node, SetOp):
+        l, lp = _elide(node.left, p, an)
+        r, rp = _elide(node.right, p, an)
+        keys = tuple(sorted(an.schema(node.left)))  # whole-row hash order
+        if p == 1:
+            out = replace(node, left=l, right=r, skip_left_shuffle=True,
+                          skip_right_shuffle=True)
+            return out, Partitioning(keys, p, node.seed)
+        target = None
+        if lp is not None and lp.keys == keys:
+            target = lp
+        elif rp is not None and rp.keys == keys:
+            target = rp
+        elided_seed = target.seed if target is not None else node.seed
+        if target is None:
+            target = Partitioning(keys, p, node.seed)
+        out = replace(node, left=l, right=r, seed=elided_seed,
+                      skip_left_shuffle=lp == target,
+                      skip_right_shuffle=rp == target)
+        return out, Partitioning(keys, p, elided_seed)
+    if isinstance(node, Distinct):
+        c, cp = _elide(node.child, p, an)
+        keys = tuple(sorted(an.schema(node.child)))
+        matches = cp is not None and cp.keys == keys  # seed-independent
+        skip = p == 1 or matches
+        part = cp if matches else Partitioning(keys, p, node.seed)
+        return replace(node, child=c, skip_shuffle=skip), part
+    raise TypeError(node)
+
+
+def optimize_with_partitioning(
+        plan: Node, input_schemas: Sequence[dict], num_shards: int
+) -> tuple[Node, Partitioning | None]:
+    """All passes: probe -> predicate pushdown -> projection pushdown ->
+    shuffle elision. Pure plan-to-plan; safe to golden-test offline.
+    Also returns the result's static placement (one elision walk serves
+    both the rewrite and the output DistTable tag)."""
+    an = _Analysis(input_schemas)
+    plan = _annotate_selects(plan, an)
+    plan = _pushdown_selects(plan, an)
+    plan = _pushdown_projections(plan, None, an)
+    return _elide(plan, num_shards, an)
+
+
+def optimize(plan: Node, input_schemas: Sequence[dict], num_shards: int
+             ) -> Node:
+    return optimize_with_partitioning(plan, input_schemas, num_shards)[0]
+
+
+def output_partitioning(plan: Node, input_schemas: Sequence[dict],
+                        num_shards: int) -> Partitioning | None:
+    """Static placement of the plan's result (tags the output DistTable)."""
+    _, part = _elide(plan, num_shards, _Analysis(input_schemas))
+    return part
+
+
+# ---------------------------------------------------------------------------
+# canonical cache key
+# ---------------------------------------------------------------------------
+
+
+class _Uncacheable(Exception):
+    pass
+
+
+def canonical_key(plan: Node):
+    """Hashable canonical form of the plan (the jit-cache key), or None when
+    any Select lacks a user cache key (callables cannot be canonicalized)."""
+    try:
+        return _canon(plan)
+    except _Uncacheable:
+        return None
+
+
+def _predicate_fingerprint(predicate):
+    """Best-effort structural identity of a predicate's code: a fresh
+    lambda with identical source shares it (cache hit), while two
+    predicates accidentally given the same user key but different logic
+    diverge. Captured closure VALUES are invisible here — the user key
+    must cover those (the documented contract)."""
+    code = getattr(predicate, "__code__", None)
+    if code is None:
+        return None
+    return (code.co_code, tuple(map(str, code.co_consts)), code.co_names)
+
+
+def _canon(node: Node):
+    name = type(node).__name__
+    if isinstance(node, Scan):
+        return (name, node.slot)
+    if isinstance(node, Select):
+        if node.key is None:
+            raise _Uncacheable
+        return (name, node.key, _predicate_fingerprint(node.predicate),
+                node.columns, _canon(node.child))
+    vals = []
+    for f in dataclasses.fields(node):
+        v = getattr(node, f.name)
+        if isinstance(v, Node) or callable(v):
+            continue
+        vals.append((f.name, v))
+    return (name, tuple(vals)) + tuple(_canon(c) for c in children(node))
+
+
+# ---------------------------------------------------------------------------
+# compiler / executor — runs INSIDE shard_map (one body for the whole plan)
+# ---------------------------------------------------------------------------
+
+
+def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
+                 num_shards: int, report: list | None = None
+                 ) -> tuple[Table, tuple]:
+    """Evaluate the plan over per-shard local Tables.
+
+    Returns ``(output table, stats)`` where ``stats`` is one ShuffleStats
+    per *potential* shuffle in depth-first plan order (zeros when elided),
+    keeping the stats pytree stable whether or not the optimizer fired.
+    """
+    p = num_shards
+    stats: list = []
+    memo: dict[int, Table] = {}
+
+    def cap(t: Table, bucket: int | None, slack: float = 2.0) -> int:
+        if bucket is not None:
+            return bucket
+        return default_bucket_capacity(t.capacity, p, slack)
+
+    def run(node: Node) -> Table:
+        hit = memo.get(id(node))
+        if hit is not None:
+            return hit
+        out = _exec(node)
+        memo[id(node)] = out
+        return out
+
+    def _exec(node: Node) -> Table:
+        if isinstance(node, Scan):
+            return tables[node.slot]
+        if isinstance(node, Select):
+            return L.select(run(node.child), node.predicate)
+        if isinstance(node, Project):
+            return L.project(run(node.child), list(node.columns))
+        if isinstance(node, Limit):
+            return L.head(run(node.child), node.n)
+        if isinstance(node, Repartition):
+            t = run(node.child)
+            out, st = D.dist_repartition_by(
+                t, list(node.keys), axis_name=axis_name,
+                bucket_capacity=cap(t, node.bucket_capacity), seed=node.seed,
+                skip_shuffle=node.skip_shuffle, report=report)
+            stats.extend(st)
+            return out
+        if isinstance(node, Join):
+            lt, rt = run(node.left), run(node.right)
+            cb = node.bucket_capacity or max(
+                cap(lt, None), cap(rt, None))
+            # default output budget = what a fully-shuffled join would get
+            # (each operand lands at p*cb rows after repartition), so an
+            # elided shuffle never shrinks the truncation budget relative
+            # to the eager chain
+            out_capacity = node.out_capacity
+            if out_capacity is None:
+                out_capacity = 2 * p * cb
+            out, st = D.dist_join(
+                lt, rt, list(node.on), axis_name=axis_name,
+                bucket_capacity=cb, how=node.how, algorithm=node.algorithm,
+                out_capacity=out_capacity, seed=node.seed,
+                shuffle_seed=node.shuffle_seed,
+                skip_left_shuffle=node.skip_left_shuffle,
+                skip_right_shuffle=node.skip_right_shuffle, report=report)
+            stats.extend(st)
+            return out
+        if isinstance(node, GroupBy):
+            t = run(node.child)
+            out, st = D.dist_groupby(
+                t, list(node.keys), node.pairs, axis_name=axis_name,
+                bucket_capacity=cap(t, node.bucket_capacity),
+                strategy=node.strategy,
+                partial_capacity=node.partial_capacity,
+                out_capacity=node.out_capacity, seed=node.seed,
+                shuffle_seed=node.shuffle_seed,
+                skip_shuffle=node.skip_shuffle, report=report)
+            stats.extend(st)
+            return out
+        if isinstance(node, Sort):
+            t = run(node.child)
+            out, st = D.dist_sort(
+                t, list(node.by), axis_name=axis_name,
+                bucket_capacity=cap(t, node.bucket_capacity, slack=4.0),
+                samples_per_shard=node.samples_per_shard,
+                skip_shuffle=node.skip_shuffle, report=report)
+            stats.extend(st)
+            return out
+        if isinstance(node, SetOp):
+            a, b = run(node.left), run(node.right)
+            cb = node.bucket_capacity or max(cap(a, None), cap(b, None))
+            kw = dict(axis_name=axis_name, bucket_capacity=cb, seed=node.seed,
+                      skip_left_shuffle=node.skip_left_shuffle,
+                      skip_right_shuffle=node.skip_right_shuffle,
+                      report=report)
+            if isinstance(node, Union):
+                out, st = D.dist_union(a, b, **kw)
+            elif isinstance(node, Intersect):
+                out, st = D.dist_intersect(a, b, **kw)
+            else:
+                out, st = D.dist_difference(a, b, mode=node.mode, **kw)
+            stats.extend(st)
+            return out
+        if isinstance(node, Distinct):
+            t = run(node.child)
+            out, st = D.dist_distinct(
+                t, axis_name=axis_name,
+                bucket_capacity=cap(t, node.bucket_capacity), seed=node.seed,
+                skip_shuffle=node.skip_shuffle, report=report)
+            stats.extend(st)
+            return out
+        raise TypeError(node)
+
+    out = run(plan)
+    return out, tuple(stats)
+
+
+# ---------------------------------------------------------------------------
+# explain
+# ---------------------------------------------------------------------------
+
+
+def _shuffle_word(skip: bool) -> str:
+    return "elided" if skip else "alltoall"
+
+
+def explain(plan: Node) -> str:
+    """Human-readable plan tree (golden-testable): one node per line, with
+    every potential shuffle marked ``alltoall`` or ``elided``."""
+    lines: list[str] = []
+
+    def walk(node: Node, depth: int):
+        pad = "  " * depth
+        if isinstance(node, Scan):
+            part = ""
+            if node.partitioning is not None:
+                pt = node.partitioning
+                part = (f", partitioned=hash{pt.keys}%"
+                        f"{pt.num_partitions}@seed{pt.seed}")
+            lines.append(f"{pad}Scan(slot={node.slot}{part})")
+        elif isinstance(node, Select):
+            lines.append(f"{pad}Select(key={node.key!r}, "
+                         f"columns={node.columns})")
+        elif isinstance(node, Project):
+            lines.append(f"{pad}Project(columns={node.columns})")
+        elif isinstance(node, Limit):
+            lines.append(f"{pad}Limit(n={node.n})")
+        elif isinstance(node, Repartition):
+            lines.append(f"{pad}Repartition(keys={node.keys}, "
+                         f"seed={node.seed}, "
+                         f"shuffle={_shuffle_word(node.skip_shuffle)})")
+        elif isinstance(node, Join):
+            lines.append(
+                f"{pad}Join(on={node.on}, how={node.how}, "
+                f"algorithm={node.algorithm}, "
+                f"left={_shuffle_word(node.skip_left_shuffle)}, "
+                f"right={_shuffle_word(node.skip_right_shuffle)})")
+        elif isinstance(node, GroupBy):
+            lines.append(
+                f"{pad}GroupBy(keys={node.keys}, aggs={node.pairs}, "
+                f"strategy={node.strategy}, "
+                f"shuffle={_shuffle_word(node.skip_shuffle)})")
+        elif isinstance(node, Sort):
+            lines.append(f"{pad}Sort(by={node.by}, "
+                         f"shuffle={_shuffle_word(node.skip_shuffle)})")
+        elif isinstance(node, SetOp):
+            extra = f", mode={node.mode}" if isinstance(node, Difference) \
+                else ""
+            lines.append(
+                f"{pad}{type(node).__name__}("
+                f"left={_shuffle_word(node.skip_left_shuffle)}, "
+                f"right={_shuffle_word(node.skip_right_shuffle)}{extra})")
+        elif isinstance(node, Distinct):
+            lines.append(f"{pad}Distinct("
+                         f"shuffle={_shuffle_word(node.skip_shuffle)})")
+        else:
+            lines.append(f"{pad}{type(node).__name__}")
+        for c in children(node):
+            walk(c, depth + 1)
+
+    walk(plan, 0)
+    return "\n".join(lines)

@@ -34,6 +34,27 @@ class ShuffleStats(NamedTuple):
     received: jax.Array  # int32 scalar: valid rows received
 
 
+class Partitioning(NamedTuple):
+    """Static placement metadata: rows live on shard ``hash(keys) % n``.
+
+    Tagged onto a ``DistTable`` (and tracked through the plan optimizer) so a
+    downstream join/groupby on the same key columns, seed, and modulus can
+    *elide* its AllToAll entirely — equal keys are already colocated. The
+    tag is exact, not advisory: it is only attached to tables produced by a
+    hash repartition (or an operator that provably preserves one).
+    """
+
+    keys: tuple[str, ...]   # key columns, in the order they were hashed
+    num_partitions: int     # the modulus (== mesh axis size when created)
+    seed: int               # murmur3 seed of the partitioning hash
+
+
+def zero_shuffle_stats() -> ShuffleStats:
+    """Stats for an elided shuffle: nothing sent, nothing dropped."""
+    return ShuffleStats(overflow=jnp.zeros((), jnp.int32),
+                        received=jnp.zeros((), jnp.int32))
+
+
 def pack_by_partition(part_id: jax.Array, num_partitions: int,
                       bucket_capacity: int):
     """Group rows into equal-capacity per-partition send slots.

@@ -66,8 +66,24 @@ class Table:
         return cls(cols, rc)
 
     @classmethod
-    def empty(cls, schema: dict[str, jnp.dtype], capacity: int) -> "Table":
-        cols = {k: jnp.zeros((capacity,), dt) for k, dt in schema.items()}
+    def empty(cls, schema: dict, capacity: int) -> "Table":
+        """Pre-allocate an all-invalid table.
+
+        ``schema`` values describe one column each: a plain dtype (1-D
+        column), a ``(dtype, trailing_shape)`` tuple, or a
+        ``jax.ShapeDtypeStruct`` whose shape is the per-row trailing shape —
+        e.g. ``{"tokens": (jnp.int32, (128,))}`` for a token-payload column
+        of shape ``(capacity, 128)``.
+        """
+        cols = {}
+        for k, spec in schema.items():
+            if isinstance(spec, jax.ShapeDtypeStruct):
+                tail, dt = tuple(spec.shape), spec.dtype
+            elif isinstance(spec, tuple):
+                dt, tail = spec[0], tuple(spec[1])
+            else:
+                tail, dt = (), spec
+            cols[k] = jnp.zeros((capacity,) + tail, dt)
         return cls(cols, jnp.asarray(0, jnp.int32))
 
     # -- introspection --------------------------------------------------------

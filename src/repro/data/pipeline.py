@@ -5,15 +5,20 @@ inside the training program. Here the pre-processing pipeline for LM
 training is literally the relational operator chain
 
     samples = lm_samples_table(...)              # 'CSV read'
-    good    = select(samples, quality > θ)       # Select   (paper §II-B-1)
-    joined  = join(good, labels, on=sample_id)   # Join     (paper §II-B-3)
-    batch   = project(head(joined, B), tokens)   # Project  (paper §II-B-2)
+    frame(samples).select(quality > θ)           # Select   (paper §II-B-1)
+        .join(labels, on=sample_id)              # Join     (paper §II-B-3)
+        .project(tokens, weight).limit(B)        # Project  (paper §II-B-2)
+        .collect()
 
-executed as one jitted XLA program whose output columns ARE the train-step
-inputs (zero-copy hand-off, the Arrow story). The pipeline is a pure
-function of ``(seed, step)`` — restart/replay determinism for fault
-tolerance — and the :class:`Prefetcher` overlaps batch assembly with the
-step (bounded-staleness straggler mitigation, DESIGN.md §6).
+built as a **LazyFrame** plan and compiled into ONE fused shard_map/XLA
+program per batch (repro.core.frame): the optimizer pushes the quality
+filter and the tokens/weight projection below the join, and on a
+single-shard mesh elides every shuffle — one dispatch, no intermediate
+materialization, output columns ARE the train-step inputs (zero-copy
+hand-off, the Arrow story). The pipeline is a pure function of
+``(seed, step)`` — restart/replay determinism for fault tolerance — and
+the :class:`Prefetcher` overlaps batch assembly with the step
+(bounded-staleness straggler mitigation, DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ import numpy as np
 
 from repro.core import ops_agg as A
 from repro.core import ops_local as L
+from repro.core.context import DistContext
 from repro.core.table import Table, concat_tables
 from repro.data import synthetic
 
@@ -48,12 +54,16 @@ class PipelineConfig:
 class RelationalTokenPipeline:
     """Deterministic relational ETL producing fixed-shape token batches."""
 
-    def __init__(self, config: PipelineConfig):
+    def __init__(self, config: PipelineConfig,
+                 ctx: DistContext | None = None):
         self.config = config
         c = config
         self._raw_rows = max(4, int(np.ceil(c.global_batch * c.oversample)))
-        self._etl = jax.jit(partial(
-            _etl_step, threshold=c.quality_threshold, batch=c.global_batch))
+        # the ETL chain runs on a DistContext (1-D mesh over all local
+        # devices; single device in unit tests). The LazyFrame plan is
+        # identical every refill, so the fused program jit-caches on its
+        # canonical plan + shapes.
+        self._ctx = ctx or DistContext(axis_name="etl")
         # quality-bucket stats ride the two-phase aggregation machinery:
         # one partial per refill round, combined once per batch. Bounding
         # partials by the source cardinality keeps each one tiny (and the
@@ -83,6 +93,31 @@ class RelationalTokenPipeline:
             seed=c.seed, step=step, shard=refill)
         return samples, labels
 
+    def _etl_frame(self, samples: Table, labels: Table):
+        """The fused relational chain (select -> join -> project -> limit),
+        one shard_map program via LazyFrame.collect().
+
+        Capacities are skew-proof: the join's shuffle bucket holds a whole
+        shard's rows (a one-source->one-destination pileup cannot overflow)
+        and out_capacity covers every sample globally (sample_id is unique
+        per side, so matches <= total rows even if one shard receives them
+        all) — batch content never silently truncates, whatever the local
+        device count.
+        """
+        c = self.config
+        ds = self._ctx.scatter(samples)
+        dl = self._ctx.scatter(labels)
+        thr = c.quality_threshold
+        return (self._ctx.frame(ds)
+                .select(lambda cols: cols["quality"] > thr,
+                        key=("quality_gt", thr))
+                .join(self._ctx.frame(dl), "sample_id", how="inner",
+                      algorithm="hash",
+                      bucket_capacity=ds.local_capacity,
+                      out_capacity=self._ctx.num_shards * ds.local_capacity)
+                .project(["tokens", "weight"])
+                .limit(c.global_batch))
+
     def global_batch(self, step: int) -> dict[str, np.ndarray]:
         """Assemble batch `step`. Pure in (seed, step); refills deterministic."""
         c = self.config
@@ -96,11 +131,11 @@ class RelationalTokenPipeline:
             if c.collect_stats:
                 stat_partials.append(self._stats_partial(
                     L.project(samples, ["source", "quality"])))
-            tokens, weight, n = self._etl(samples, labels)
-            n = int(n)
-            take = min(n, need - got)
-            toks[got : got + take] = np.asarray(tokens[:take])
-            wts[got : got + take] = np.asarray(weight[:take])
+            batch = self._etl_frame(samples, labels).collect() \
+                .to_table().to_numpy()
+            take = min(len(batch["weight"]), need - got)
+            toks[got : got + take] = batch["tokens"][:take]
+            wts[got : got + take] = batch["weight"][:take]
             got += take
             if got >= need:
                 break
@@ -122,15 +157,6 @@ class RelationalTokenPipeline:
         while True:
             yield self.global_batch(step)
             step += 1
-
-
-def _etl_step(samples: Table, labels: Table, *, threshold: float, batch: int):
-    """The jitted relational chain (select -> join -> project -> head)."""
-    good = L.select(samples, lambda cols: cols["quality"] > threshold)
-    joined = L.join(good, labels, on="sample_id", how="inner", algorithm="hash",
-                    out_capacity=good.capacity)
-    out = L.head(L.project(joined, ["tokens", "weight"]), batch)
-    return out.columns["tokens"], out.columns["weight"], out.row_count
 
 
 SOURCE_STAT_AGGS = (("quality", "count"), ("quality", "mean"),

@@ -129,6 +129,94 @@ def case_groupby():
     return out
 
 
+def case_plan_fused():
+    """Fused LazyFrame chain == eager op-by-op on 8 shards, with strictly
+    fewer AllToAlls (pushdown + elision), including the co-partitioned
+    join fast path."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+
+    def int_table(n, kr, seed):
+        rng = np.random.default_rng(seed)
+        return Table.from_arrays({
+            "k": rng.integers(0, kr, n).astype(np.int32),
+            "d0": rng.integers(-40, 40, n).astype(np.float32),
+            "d1": rng.integers(-40, 40, n).astype(np.float32)})
+
+    cap, kr = 600, 2400  # sparse join: no truncation on either path
+    orders = ctx.from_local_parts([int_table(cap, kr, 100 + i)
+                                   for i in range(p)])
+    users = ctx.from_local_parts([int_table(cap, kr, 200 + i)
+                                  for i in range(p)])
+    dims, _ = ctx.partition_by(ctx.scatter(Table.from_arrays({
+        "k": np.arange(kr, dtype=np.int32),
+        "dval": (np.arange(kr) % 31).astype(np.float32)})), "k")
+    aggs = (("d0", "sum"), ("d0", "mean"), ("d0", "count"), ("d0_r", "max"))
+    gb_bucket = 2 * cap  # eager re-shuffles are all self-sends: one bucket
+
+    erep: list = []
+    j, (sl, sr) = ctx.join(orders, users, "k", report=erep)
+    s = ctx.select(j, lambda c: c["d0"] > 0.0, key="pos", report=erep)
+    g, (sg,) = ctx.groupby(s, "k", aggs, strategy="shuffle",
+                           bucket_capacity=gb_bucket, report=erep)
+    e_out, (s3l, s3r) = ctx.join(g, dims, "k", bucket_capacity=gb_bucket,
+                                 report=erep)
+    eager_overflow = sum(int(np.asarray(x.overflow).sum())
+                         for x in (sl, sr, sg, s3l, s3r))
+
+    fused = (ctx.frame(orders).join(ctx.frame(users), "k")
+             .select(lambda c: c["d0"] > 0.0, key="pos")
+             .groupby("k", aggs, strategy="shuffle",
+                      bucket_capacity=gb_bucket)
+             .join(ctx.frame(dims), "k", bucket_capacity=gb_bucket))
+    frep = fused.plan_report()
+    f_out, f_stats = fused.collect_with_stats()
+    fused_overflow = sum(int(np.asarray(x.overflow).sum()) for x in f_stats)
+
+    from repro.testing.compare import tables_bitwise_equal
+    identical = tables_bitwise_equal(e_out, f_out)
+    return {
+        "identical": identical,
+        "rows": int(f_out.global_rows()),
+        "eager_overflow": eager_overflow,
+        "fused_overflow": fused_overflow,
+        "eager_alltoall": sum(not r["elided"] for r in erep),
+        "fused_alltoall": sum(not r["elided"] for r in frep),
+        "eager_wire": sum(r["wire_bytes"] for r in erep),
+        "fused_wire": sum(r["wire_bytes"] for r in frep),
+    }
+
+
+def case_sort_multikey():
+    """Multi-key distributed sort: global lexicographic order across shards,
+    row multiset preserved."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    rng = np.random.default_rng(13)
+    parts = [Table.from_arrays({
+        "k": rng.integers(0, 40, 700).astype(np.int32),   # heavy ties
+        "d0": rng.integers(-1000, 1000, 700).astype(np.int32),
+        "d1": rng.standard_normal(700).astype(np.float32)})
+        for _ in range(ctx.num_shards)]
+    dt = ctx.from_local_parts(parts)
+    s, (st,) = ctx.sort(dt, ["k", "d0"], bucket_capacity=4096)
+    d = s.to_table().to_numpy()
+    pairs = list(zip(d["k"].tolist(), d["d0"].tolist()))
+    in_rows = sorted(
+        (int(k), int(v)) for t in parts
+        for k, v in zip(t.to_numpy()["k"], t.to_numpy()["d0"]))
+    return {
+        "rows": len(pairs),
+        "rows_expect": len(in_rows),
+        "order_ok": all(x <= y for x, y in zip(pairs, pairs[1:])),
+        "multiset_ok": sorted(pairs) == in_rows,
+        "overflow": int(np.asarray(st.overflow).sum()),
+    }
+
+
 def case_moe_ep():
     """EP shard_map dispatch == single-device dispatch (same weights)."""
     from repro.models.common import ModelConfig

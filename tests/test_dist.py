@@ -52,6 +52,23 @@ def test_dist_groupby_both_strategies():
     assert r["two_phase_fewer_rows"], r
 
 
+def test_plan_fused_matches_eager():
+    """The tentpole contract: one fused shard_map program per chain, with
+    strictly fewer AllToAlls and wire bytes, bit-identical to eager."""
+    r = run_case("plan_fused")
+    assert r["identical"], r
+    assert r["eager_overflow"] == 0 and r["fused_overflow"] == 0, r
+    assert r["fused_alltoall"] < r["eager_alltoall"], r
+    assert r["fused_wire"] < r["eager_wire"], r
+
+
+def test_dist_sort_multikey():
+    r = run_case("sort_multikey")
+    assert r["order_ok"] and r["multiset_ok"], r
+    assert r["rows"] == r["rows_expect"], r
+    assert r["overflow"] == 0, r
+
+
 def test_moe_ep_matches_local():
     r = run_case("moe_ep")
     assert r["moe_ep_err"] < 2e-5, r

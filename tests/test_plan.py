@@ -1,0 +1,344 @@
+"""Logical-plan layer: golden optimizer shapes + fused == eager execution.
+
+Golden tests drive the optimizer passes offline (pure plan-to-plan, an
+explicit num_shards — no mesh needed) and assert the rewrites actually
+fire: projection/predicate pushdown below the shuffle boundaries, shuffle
+elision from Partitioning tags. Execution tests run fused LazyFrame chains
+on the single-device context and compare against the eager op-by-op result
+(which keeps its shuffles — the two paths exercise different programs).
+
+Deliberately hypothesis-free: part of the minimal-environment tier-1 gate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as PL
+from repro.core.context import DistContext
+from repro.core.repartition import Partitioning
+from repro.core.table import Table
+
+I32, F32 = jnp.dtype(jnp.int32), jnp.dtype(jnp.float32)
+
+ORDERS = {"k": jax.ShapeDtypeStruct((), I32),
+          "d0": jax.ShapeDtypeStruct((), F32),
+          "d1": jax.ShapeDtypeStruct((), F32)}
+USERS = {"k": jax.ShapeDtypeStruct((), I32),
+         "d0": jax.ShapeDtypeStruct((), F32),
+         "v0": jax.ShapeDtypeStruct((), F32)}
+
+
+def find(node, cls):
+    """All nodes of type `cls` in depth-first order."""
+    out = [node] if isinstance(node, cls) else []
+    for c in PL.children(node):
+        out += find(c, cls)
+    return out
+
+
+# --- golden plan-shape tests --------------------------------------------------
+
+
+def test_projection_pushdown_narrows_join_inputs():
+    plan = PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                      ("k",), (("d0", "sum"),))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    join = find(opt, PL.Join)[0]
+    assert isinstance(join.left, PL.Project)
+    assert set(join.left.columns) == {"k", "d0"}  # d1 dropped pre-shuffle
+    assert isinstance(join.right, PL.Project)
+    # right d0 would surface as the unused d0_r: only the key survives
+    assert set(join.right.columns) == {"k"}
+
+
+def test_predicate_pushdown_below_join_left():
+    pred = lambda c: c["d0"] > 0.5
+    plan = PL.Select(PL.Join(PL.Scan(0), PL.Scan(1), ("k",), how="inner"),
+                     pred, key="p")
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert isinstance(opt, PL.Join)  # select no longer on top
+    selects = find(opt.left, PL.Select)
+    assert selects and selects[0].columns == ("d0",)
+    assert not find(opt.right, PL.Select)
+
+
+def test_predicate_pushdown_blocked_for_full_join():
+    plan = PL.Select(PL.Join(PL.Scan(0), PL.Scan(1), ("k",), how="full"),
+                     lambda c: c["d0"] > 0.5, key="p")
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    # pushing a one-sided filter through a full outer join is unsound
+    assert isinstance(opt, PL.Select)
+
+
+def test_predicate_pushdown_below_sort_and_project():
+    plan = PL.Select(PL.Sort(PL.Project(PL.Scan(0), ("k", "d0")), ("k",)),
+                     lambda c: c["d0"] > 0.0, key="p")
+    opt = PL.optimize(plan, [ORDERS], num_shards=8)
+    assert isinstance(opt, PL.Sort)
+    assert find(opt, PL.Select), "select should sink below the sort shuffle"
+
+
+def test_probe_unprobeable_predicate_pins_select():
+    # reads via values() — the recorder sees no key access, footprint None
+    plan = PL.Select(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                     lambda c: list(c.values())[0] > 0, key="p")
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert isinstance(opt, PL.Select) and opt.columns is None
+
+
+def test_shuffle_elision_co_partitioned_join():
+    part = Partitioning(("k",), 8, 7)
+    plan = PL.Join(PL.Scan(0, partitioning=part),
+                   PL.Scan(1, partitioning=part), ("k",))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    join = find(opt, PL.Join)[0]
+    assert join.skip_left_shuffle and join.skip_right_shuffle
+
+
+def test_shuffle_elision_one_side_adopts_other_seed():
+    part = Partitioning(("k",), 8, 3)  # non-default seed
+    plan = PL.Join(PL.Scan(0, partitioning=part), PL.Scan(1), ("k",), seed=7)
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    join = find(opt, PL.Join)[0]
+    assert join.skip_left_shuffle and not join.skip_right_shuffle
+    assert join.shuffle_seed == 3  # right side reshuffles INTO the tag
+
+
+def test_groupby_elides_after_join_on_same_key():
+    plan = PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                      ("k",), (("d0", "sum"),))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert opt.skip_shuffle  # join output is already partitioned on k
+    join = find(opt, PL.Join)[0]
+    assert not (join.skip_left_shuffle or join.skip_right_shuffle)
+
+
+def test_outer_join_output_carries_no_partitioning():
+    # unmatched-side rows of right/full joins have zero-filled key columns,
+    # so a downstream groupby must NOT elide its shuffle on the join's keys
+    for how in ("right", "full"):
+        plan = PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",), how=how),
+                          ("k",), (("d0", "sum"),))
+        opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+        assert not opt.skip_shuffle, how
+        assert PL.output_partitioning(
+            PL.Join(PL.Scan(0), PL.Scan(1), ("k",), how=how),
+            [ORDERS, USERS], 8) is None, how
+    # inner and left keep their true keys on the hash shard: tag survives
+    for how in ("inner", "left"):
+        assert PL.output_partitioning(
+            PL.Join(PL.Scan(0), PL.Scan(1), ("k",), how=how),
+            [ORDERS, USERS], 8) is not None, how
+
+
+def test_projection_pushdown_keeps_collision_for_suffixed_column():
+    # consuming d0_r (right's d0, suffixed only WHILE the name clashes)
+    # must keep left's otherwise-dead d0 alive below the join
+    plan = PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                      ("k",), (("d0_r", "max"),))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    join = find(opt, PL.Join)[0]
+    assert "d0" in join.left.columns
+    assert "d0" in join.right.columns
+
+
+def test_projection_dropping_key_kills_partitioning():
+    part = Partitioning(("k",), 8, 7)
+    plan = PL.GroupBy(PL.Project(PL.Scan(0, partitioning=part), ("d0",)),
+                      ("d0",), (("d0", "count"),))
+    opt = PL.optimize(plan, [ORDERS], num_shards=8)
+    assert not opt.skip_shuffle  # tag does not survive losing its key column
+
+
+def test_mismatched_modulus_blocks_elision():
+    part = Partitioning(("k",), 4, 7)  # partitioned for a 4-shard mesh
+    plan = PL.GroupBy(PL.Scan(0, partitioning=part), ("k",),
+                      (("d0", "sum"),))
+    opt = PL.optimize(plan, [ORDERS], num_shards=8)
+    assert not opt.skip_shuffle
+
+
+def test_single_shard_elides_everything():
+    plan = PL.Sort(PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                              ("k",), (("d0", "sum"),)), ("k",))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=1)
+    assert "alltoall" not in PL.explain(opt)
+
+
+def test_canonical_key_stability_and_uncacheable_select():
+    mk = lambda: PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                            ("k",), (("d0", "sum"),))
+    assert PL.canonical_key(mk()) == PL.canonical_key(mk())
+    assert PL.canonical_key(
+        PL.Select(mk(), lambda c: c["d0"] > 0)) is None  # no key -> no cache
+    k1 = PL.canonical_key(PL.Select(mk(), lambda c: c["d0"] > 0, key="a"))
+    k2 = PL.canonical_key(PL.Select(mk(), lambda c: c["d0"] > 1, key="b"))
+    assert k1 is not None and k1 != k2
+
+
+# --- execution: fused == eager on the single-device context -------------------
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return DistContext(axis_name="plan_test")
+
+
+def int_table(n, key_range, seed, names=("d0", "d1")):
+    rng = np.random.default_rng(seed)
+    cols = {"k": rng.integers(0, key_range, n).astype(np.int32)}
+    for nm in names:
+        # integer-valued floats: aggregation order cannot perturb bits
+        cols[nm] = rng.integers(-40, 40, n).astype(np.float32)
+    return Table.from_arrays(cols)
+
+
+def assert_tables_equal(a, b):
+    from repro.testing.compare import table_rows, tables_bitwise_equal
+    assert tables_bitwise_equal(a, b), (table_rows(a), table_rows(b))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_collect_matches_eager_join_select_groupby(ctx, seed):
+    orders = ctx.scatter(int_table(300, 500, seed))
+    users = ctx.scatter(int_table(300, 500, seed + 50))
+    aggs = (("d0", "sum"), ("d0", "mean"), ("d0", "count"), ("d0_r", "max"))
+
+    j, _ = ctx.join(orders, users, "k")
+    s = ctx.select(j, lambda c: c["d0"] > 0.0, key="pos")
+    ge, _ = ctx.groupby(s, "k", aggs, strategy="shuffle")
+
+    fused = (ctx.frame(orders).join(ctx.frame(users), "k")
+             .select(lambda c: c["d0"] > 0.0, key="pos")
+             .groupby("k", aggs, strategy="shuffle"))
+    assert_tables_equal(ge, fused.collect())
+
+
+def test_collect_matches_eager_outer_join_groupby(ctx):
+    # the review repro: fused full-join -> groupby must match eager
+    a = ctx.scatter(int_table(150, 80, 61))
+    b = ctx.scatter(int_table(150, 80, 62))
+    j, _ = ctx.join(a, b, "k", how="full")
+    ge, _ = ctx.groupby(j, "k", (("d0", "count"),), strategy="shuffle")
+    fused = (ctx.frame(a).join(ctx.frame(b), "k", how="full")
+             .groupby("k", (("d0", "count"),), strategy="shuffle"))
+    assert_tables_equal(ge, fused.collect())
+
+
+def test_collect_suffixed_column_aggregation(ctx):
+    # the review repro: aggregating d0_r after projection pushdown
+    a = ctx.scatter(int_table(150, 60, 63))
+    b = ctx.scatter(int_table(150, 60, 64))
+    j, _ = ctx.join(a, b, "k")
+    ge, _ = ctx.groupby(j, "k", (("d0_r", "max"),), strategy="shuffle")
+    fused = (ctx.frame(a).join(ctx.frame(b), "k")
+             .groupby("k", (("d0_r", "max"),), strategy="shuffle"))
+    assert_tables_equal(ge, fused.collect())
+
+
+def test_collect_matches_eager_set_ops(ctx):
+    a = ctx.scatter(int_table(120, 40, 3, names=()))
+    b = ctx.scatter(int_table(120, 40, 4, names=()))
+    for eager, frame in [
+        (ctx.union(a, b)[0], ctx.frame(a).union(ctx.frame(b))),
+        (ctx.intersect(a, b)[0], ctx.frame(a).intersect(ctx.frame(b))),
+        (ctx.difference(a, b)[0], ctx.frame(a).difference(ctx.frame(b))),
+        (ctx.distinct(a)[0], ctx.frame(a).distinct()),
+    ]:
+        assert_tables_equal(eager, frame.collect())
+
+
+def test_multikey_sort_matches_lexsort(ctx):
+    t = int_table(200, 12, 7)  # many key ties -> d0 breaks them
+    s, _ = ctx.sort(ctx.scatter(t), ["k", "d0"])
+    got = s.to_table().to_numpy()
+    d = t.to_numpy()
+    order = np.lexsort((d["d0"], d["k"]))  # primary key last in lexsort
+    np.testing.assert_array_equal(got["k"], d["k"][order])
+    np.testing.assert_array_equal(got["d0"], d["d0"][order])
+
+
+def test_lazy_sort_and_limit(ctx):
+    t = int_table(150, 30, 11)
+    out = ctx.frame(ctx.scatter(t)).sort(["k", "d0"]).limit(10).collect()
+    d = out.to_table().to_numpy()
+    ref = t.to_numpy()
+    order = np.lexsort((ref["d0"], ref["k"]))
+    np.testing.assert_array_equal(d["k"], ref["k"][order][:10])
+
+
+def test_co_partitioned_fast_path_matches_shuffled(ctx):
+    # partition_by tags its output; the tagged join must equal the untagged
+    raw = ctx.scatter(int_table(200, 64, 21))
+    dims = ctx.scatter(int_table(64, 64, 22, names=("v0",)))
+    part_raw, _ = ctx.partition_by(raw, "k")
+    part_dims, _ = ctx.partition_by(dims, "k")
+    assert part_raw.partitioning == Partitioning(("k",), ctx.num_shards, 7)
+    fast = ctx.frame(part_raw).join(ctx.frame(part_dims), "k")
+    rep = fast.plan_report()
+    assert all(r["elided"] for r in rep), rep
+    slow, _ = ctx.join(raw, dims, "k")
+    assert_tables_equal(slow, fast.collect())
+
+
+def test_plan_report_accounts_wire_bytes(ctx):
+    orders = ctx.scatter(int_table(100, 50, 31))
+    users = ctx.scatter(int_table(100, 50, 32))
+    f = (ctx.frame(orders).join(ctx.frame(users), "k", bucket_capacity=64)
+         .groupby("k", (("d0", "sum"),)))
+    rep = f.plan_report()
+    assert len(rep) == 3  # join L, join R, groupby
+    assert [r["elided"] for r in rep].count(True) >= 1  # groupby elides
+    p = ctx.num_shards
+    for r in rep:
+        expect = 0 if r["elided"] else p * p * r["bucket"] * r["row_bytes"]
+        assert r["wire_bytes"] == expect
+
+
+def test_select_cache_key_controls_recompilation(ctx):
+    t = ctx.scatter(int_table(64, 16, 41))
+    n0 = len(ctx._cache)
+    ctx.select(t, lambda c: c["d0"] > 0, key="cached_pred")
+    n1 = len(ctx._cache)
+    assert n1 == n0 + 1
+    ctx.select(t, lambda c: c["d0"] > 0, key="cached_pred")
+    assert len(ctx._cache) == n1  # hit
+    ctx.select(t, lambda c: c["d0"] < 0)  # keyless -> uncacheable, no entry
+    assert len(ctx._cache) == n1
+
+
+def test_same_key_different_predicate_not_conflated(ctx):
+    # the bytecode fingerprint keeps a reused key from serving stale code
+    t = ctx.scatter(int_table(64, 16, 51))
+    a = ctx.select(t, lambda c: c["d0"] > 0, key="same")
+    b = ctx.select(t, lambda c: c["d0"] < 0, key="same")
+    da, db = a.to_table().to_numpy(), b.to_table().to_numpy()
+    assert (da["d0"] > 0).all()
+    assert (db["d0"] < 0).all()
+
+
+def test_collect_caches_on_canonical_plan(ctx):
+    t = ctx.scatter(int_table(64, 16, 43))
+    f = lambda: (ctx.frame(t)
+                 .select(lambda c: c["d0"] > 0, key="q")
+                 .groupby("k", (("d0", "sum"),)))
+    f().collect()
+    n1 = len(ctx._cache)
+    f().collect()  # same canonical plan + shapes -> cache hit
+    assert len(ctx._cache) == n1
+
+
+# --- Table.empty N-D schemas (satellite) --------------------------------------
+
+
+def test_table_empty_nd_schema():
+    t = Table.empty({"k": jnp.int32,
+                     "tokens": (jnp.int32, (16,)),
+                     "emb": jax.ShapeDtypeStruct((4, 2), jnp.float32)},
+                    capacity=8)
+    assert t.columns["k"].shape == (8,)
+    assert t.columns["tokens"].shape == (8, 16)
+    assert t.columns["tokens"].dtype == jnp.int32
+    assert t.columns["emb"].shape == (8, 4, 2)
+    assert int(t.row_count) == 0
