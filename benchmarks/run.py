@@ -8,6 +8,7 @@ Sections:
   kernels roofline (bench_kernels)
   groupby strategies: shuffle vs two-phase (bench_groupby)
   lazy plan fusion: fused vs eager ETL chain (bench_plan)
+  sort->join chains: range provenance vs re-shuffling (bench_sort_chain)
   Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
 
 --json writes every section's tables as machine-readable records (the
@@ -32,7 +33,7 @@ def main() -> None:
     t0 = time.perf_counter()
     from benchmarks import (bench_binding_overhead, bench_groupby,
                             bench_kernels, bench_plan, bench_scaling,
-                            bench_vs_baselines)
+                            bench_sort_chain, bench_vs_baselines)
 
     print(f"# benchmark run (quick={quick})")
     sections = [
@@ -41,6 +42,7 @@ def main() -> None:
         ("kernels", bench_kernels.main),
         ("groupby", bench_groupby.main),
         ("plan", bench_plan.main),
+        ("sort_chain", bench_sort_chain.main),
         ("scaling", bench_scaling.main),
     ]
     results: dict[str, list[dict]] = {}

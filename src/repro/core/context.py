@@ -41,7 +41,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import ops_agg as A
 from repro.core import plan as PL
-from repro.core.repartition import Partitioning
+from repro.core.repartition import (Partitioning, RangePartitioning,
+                                    fresh_range_fingerprint)
 from repro.core.table import Table
 from repro.utils import ceil_div
 
@@ -248,6 +249,12 @@ class DistContext:
             plan, part = PL.optimize_with_partitioning(plan, schemas, p)
         else:
             part = PL.output_partitioning(plan, schemas, p)
+        if isinstance(part, RangePartitioning):
+            # materialized tables get a unique provenance token: two
+            # executions of the same plan shape over different inputs have
+            # different splitters and must never fingerprint-match
+            part = dataclasses.replace(
+                part, fingerprint=fresh_range_fingerprint())
         key = PL.canonical_key(plan)
 
         def body(*tables):
@@ -346,8 +353,26 @@ class DistContext:
 
     def sort(self, a: DistTable, by, *, bucket_capacity=None,
              samples_per_shard: int = 64, report: list | None = None):
-        """Global sort by one or more key columns (lexicographic order)."""
+        """Global sort by one or more key columns (lexicographic order).
+
+        The result carries a :class:`RangePartitioning` tag (splitter
+        provenance): feeding it back through :meth:`frame` lets the
+        optimizer elide the shuffle of a downstream sort/groupby/join on a
+        key prefix — the sort-merge fast path.
+        """
         by_t = (by,) if isinstance(by, str) else tuple(by)
         plan = PL.Sort(PL.Scan(0), by_t, bucket_capacity=bucket_capacity,
                        samples_per_shard=samples_per_shard)
         return self._run_plan(plan, [a], report=report)
+
+    def limit(self, t: DistTable, n: int, *, report: list | None = None
+              ) -> DistTable:
+        """True global head-n (counts prefix-scan -> per-shard quota).
+
+        Returns exactly the first ``min(n, total)`` rows in shard order —
+        after :meth:`sort`, the global top-n. Rides the same one-node-plan
+        path as every other eager operator.
+        """
+        plan = PL.Limit(PL.Scan(0), int(n))
+        out, _ = self._run_plan(plan, [t], report=report)
+        return out

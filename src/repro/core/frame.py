@@ -80,7 +80,10 @@ class LazyFrame:
         return self._chain(PL.Project(self._plan, tuple(columns)))
 
     def limit(self, n: int) -> "LazyFrame":
-        """Per-shard head(n) (local truncation; global total <= shards*n)."""
+        """True global head(n): exactly the first ``min(n, total)`` rows in
+        shard order — the global top-n after :meth:`sort`. A counts
+        prefix-scan inside the fused program assigns each shard its take
+        quota (one int32 per shard on the wire, no AllToAll)."""
         return self._chain(PL.Limit(self._plan, int(n)))
 
     def partition_by(self, keys, *, seed: int = 7, bucket_capacity=None
@@ -113,6 +116,11 @@ class LazyFrame:
 
     def sort(self, by, *, bucket_capacity=None, samples_per_shard: int = 64
              ) -> "LazyFrame":
+        """Global sort (range partition + local sort). The optimizer tracks
+        the output's :class:`~repro.core.repartition.RangePartitioning`, so
+        a downstream sort/groupby on a key prefix elides its shuffle and a
+        downstream join range-aligns its other side (one AllToAll, not
+        two)."""
         by_t = (by,) if isinstance(by, str) else tuple(by)
         return self._chain(PL.Sort(self._plan, by_t,
                                    bucket_capacity=bucket_capacity,

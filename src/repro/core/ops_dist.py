@@ -93,6 +93,82 @@ def dist_repartition_by(table: Table, keys: Sequence[str] | str, *,
     return out, (st,)
 
 
+def _lex_cascade_pid(splitters, row_keys, capacity: int, *,
+                     strict: bool) -> jax.Array:
+    """pid[r] = #{splitter tuples lexicographically < row r} (strict) or
+    <= (non-strict), via a comparison cascade over the key columns —
+    sidesteps packing multi-key tuples into one wide integer (no uint64
+    without x64 on this stack). The single shared kernel behind BOTH the
+    sort's splitter assignment and the join's range alignment: the two
+    placements must mirror each other exactly.
+    """
+    m = splitters[0].shape[0]
+    lt = jnp.zeros((m, capacity), bool)
+    eq = jnp.ones((m, capacity), bool)
+    for s, r in zip(splitters, row_keys):
+        s2, r2 = s[:, None], r[None, :]
+        lt = lt | (eq & (s2 < r2))
+        eq = eq & (s2 == r2)
+    le = lt if strict else lt | eq
+    return jnp.sum(le.astype(jnp.int32), axis=0)
+
+
+def _lex_max_key_tuple(table: Table, keys: Sequence[str]):
+    """This shard's lexicographically largest valid key tuple, in the
+    order-preserving uint32 space (zeros — the lex minimum — on an empty
+    shard)."""
+    invalid = (~table.valid_mask()).astype(jnp.int32)
+    cols_u = [L.ordered_u32(table.columns[k]) for k in keys]
+    out = jax.lax.sort((invalid, *cols_u), num_keys=1 + len(cols_u))
+    idx = jnp.maximum(table.row_count - 1, 0)  # valid max sorts to rc-1
+    return [jnp.where(table.row_count > 0, c[idx], jnp.uint32(0))
+            for c in out[1:]]
+
+
+def _range_align_pid(table: Table, anchor: Table, keys: Sequence[str], *,
+                     axis_name: str) -> jax.Array:
+    """Destinations placing ``table``'s rows where ``anchor`` keeps equal
+    keys.
+
+    ``anchor`` is range-partitioned on ``keys`` (shard key ranges disjoint
+    and ordered, equal tuples colocated — the RangePartitioning contract).
+    The boundaries are re-derived from the data: boundary i = the running
+    lexicographic max of shards 0..i's key tuples (an all_gather of p
+    scalars per key column — no AllToAll), and a row goes to
+    ``#{boundary < row}`` — rows equal to shard i's max land on shard i,
+    rows beyond the global max land on the last shard (where, for a join,
+    they meet no anchor rows anyway).
+    """
+    p = axis_size(axis_name)
+    c = table.capacity
+    local_max = _lex_max_key_tuple(anchor, keys)
+    gathered = [jax.lax.all_gather(m, axis_name) for m in local_max]  # (p,)
+
+    def lex_gt(a, b):  # tuple a > tuple b
+        gt = jnp.zeros((), bool)
+        eq = jnp.ones((), bool)
+        for x, y in zip(a, b):
+            gt = gt | (eq & (x > y))
+            eq = eq & (x == y)
+        return gt
+
+    # running lex-max over shards (p is small and static): empty shards
+    # inherit the previous boundary, keeping the boundary sequence monotone
+    carry = tuple(col[0] for col in gathered)
+    bounds = [carry]
+    for i in range(1, p - 1):
+        cand = tuple(col[i] for col in gathered)
+        take = lex_gt(cand, carry)
+        carry = tuple(jnp.where(take, x, y) for x, y in zip(cand, carry))
+        bounds.append(carry)
+    splitters = [jnp.stack([b[j] for b in bounds])
+                 for j in range(len(keys))]  # each (p-1,)
+
+    row_keys = [L.ordered_u32(table.columns[k]) for k in keys]
+    pid = _lex_cascade_pid(splitters, row_keys, c, strict=True)
+    return jnp.where(table.valid_mask(), pid, -1)
+
+
 def dist_join(
     left: Table,
     right: Table,
@@ -107,6 +183,8 @@ def dist_join(
     shuffle_seed: int | None = None,
     skip_left_shuffle: bool = False,
     skip_right_shuffle: bool = False,
+    align: str | None = None,
+    align_keys: Sequence[str] | None = None,
     report: list | None = None,
 ):
     """Distributed join = shuffle both sides by key hash, then local join.
@@ -115,20 +193,64 @@ def dist_join(
     so the local join of the repartitioned tables is exact. A side whose
     ``skip_*_shuffle`` flag is set is trusted to already be partitioned on
     ``on`` with ``shuffle_seed`` — the co-partitioned fast path.
+
+    ``align``: 'left' or 'right' names a side that is RANGE-partitioned on
+    ``align_keys`` (a prefix of ``on`` — e.g. it just came out of
+    ``dist_sort``). That side keeps its placement (its skip flag is set by
+    the optimizer) and the *other* side is range-partitioned to match,
+    using boundaries re-derived from the anchored side's data — one
+    AllToAll for the whole join instead of two, and the sort's paid-for
+    range placement survives into the join output.
     """
     on_l = [on] if isinstance(on, str) else list(on)
     ps = seed if shuffle_seed is None else shuffle_seed
+    lpid = rpid = None
+    if align == "left":
+        rpid = _range_align_pid(right, left, list(align_keys),
+                                axis_name=axis_name)
+    elif align == "right":
+        lpid = _range_align_pid(left, right, list(align_keys),
+                                axis_name=axis_name)
     left2, st_l = _shuffle(left, on_l, axis_name=axis_name,
                            bucket_capacity=bucket_capacity, seed=ps,
                            skip=skip_left_shuffle, report=report,
-                           label="join.left")
+                           label="join.left", pid=lpid)
     right2, st_r = _shuffle(right, on_l, axis_name=axis_name,
                             bucket_capacity=bucket_capacity, seed=ps,
                             skip=skip_right_shuffle, report=report,
-                            label="join.right")
+                            label="join.right", pid=rpid)
     out = L.join(left2, right2, on_l, how=how, algorithm=algorithm,
                  out_capacity=out_capacity, seed=seed + 1)
     return out, (st_l, st_r)
+
+
+def dist_limit(table: Table, n: int, *, axis_name: str,
+               report: list | None = None):
+    """True global head-n: counts prefix-scan -> per-shard take quota.
+
+    Shard i takes ``clip(n - rows_before_i, 0, rows_i)`` of its (front-
+    compacted) rows, where ``rows_before_i`` comes from an all_gather of
+    the per-shard valid counts — one int32 per shard on the wire, not an
+    AllToAll. Concatenating shards in order therefore yields exactly the
+    first n rows of the global table: head-n in shard order on unordered
+    plans, the true global top-n after ``dist_sort`` (whose shards hold
+    ordered key ranges). The report record keeps Limit attributed in the
+    wire accounting at 0 bytes.
+    """
+    p = axis_size(axis_name)
+    if report is not None:
+        report.append({"op": "limit", "elided": True,
+                       "row_bytes": _row_bytes(table), "bucket": 0,
+                       "wire_bytes": 0})
+    if p == 1:
+        return L.head(table, n), (zero_shuffle_stats(),)
+    idx = jax.lax.axis_index(axis_name)
+    counts = jax.lax.all_gather(table.row_count, axis_name)  # (p,)
+    before = jnp.sum(jnp.where(jnp.arange(p) < idx, counts, 0))
+    quota = jnp.clip(jnp.asarray(n, jnp.int32) - before, 0, table.row_count)
+    cap = min(n, table.capacity)
+    cols = {k: v[:cap] for k, v in table.columns.items()}
+    return Table(cols, quota.astype(jnp.int32)), (zero_shuffle_stats(),)
 
 
 def _dist_set_op(a: Table, b: Table, op, *, axis_name: str, bucket_capacity: int,
@@ -264,14 +386,7 @@ def _lex_splitter_pids(table: Table, by: Sequence[str], *, axis_name: str,
     splitters = [col[qs] for col in ordered]  # each (p-1,)
 
     # lexicographic splitter <= row, per (splitter, row) pair
-    lt = jnp.zeros((p - 1, c), bool)
-    eq = jnp.ones((p - 1, c), bool)
-    for s, r in zip(splitters, row_keys):
-        s2, r2 = s[:, None], r[None, :]
-        lt = lt | (eq & (s2 < r2))
-        eq = eq & (s2 == r2)
-    le = lt | eq
-    pid = jnp.sum(le.astype(jnp.int32), axis=0)
+    pid = _lex_cascade_pid(splitters, row_keys, c, strict=False)
     return jnp.where(valid, pid, -1)
 
 

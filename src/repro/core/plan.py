@@ -23,9 +23,16 @@ Optimizer passes (applied in order by :func:`optimize`):
    boundary (join/groupby/sort/repartition inputs) keeping only the columns
    the rest of the plan consumes, shrinking bytes/row on the wire.
 4. **Shuffle elision** — thread :class:`~repro.core.repartition.Partitioning`
-   tags bottom-up; an input already hash-partitioned on an operator's keys
-   (same seed, same modulus) has its AllToAll elided. A single-shard mesh
-   elides every shuffle (hash to one partition is the identity).
+   and :class:`~repro.core.repartition.RangePartitioning` tags bottom-up; an
+   input already hash-partitioned on an operator's keys (same seed, same
+   modulus) has its AllToAll elided, and a range-partitioned input (sort
+   output) satisfies a downstream Sort/GroupBy/Join on a key prefix the
+   same way — a join additionally range-ALIGNS its other side to the
+   sorted side's boundaries (one AllToAll instead of two). A single-shard
+   mesh elides every shuffle (hash to one partition is the identity).
+
+``Limit`` is a true global head-n (a counts prefix-scan inside the fused
+body assigns each shard its take quota), not a per-shard truncation.
 
 The canonicalized plan (:func:`canonical_key`) is the jit-cache key, so a
 pipeline re-collected every training step compiles exactly once.
@@ -41,7 +48,9 @@ import jax.numpy as jnp
 
 from repro.core import ops_dist as D
 from repro.core import ops_local as L
-from repro.core.repartition import Partitioning, default_bucket_capacity
+from repro.core.repartition import (Partitioning, RangePartitioning,
+                                    default_bucket_capacity,
+                                    range_prefix_matches)
 from repro.core.table import Table
 
 # ---------------------------------------------------------------------------
@@ -59,7 +68,7 @@ class Scan(Node):
     """Leaf: the ``slot``-th input DistTable of the compiled program."""
 
     slot: int
-    partitioning: Partitioning | None = None
+    partitioning: Partitioning | RangePartitioning | None = None
 
 
 @dataclass(frozen=True)
@@ -87,7 +96,9 @@ class Project(Node):
 
 @dataclass(frozen=True)
 class Limit(Node):
-    """Per-shard head(n) — local truncation, no cross-shard coordination."""
+    """True global head(n): a counts prefix-scan over the shuffle axis
+    assigns each shard a take quota summing to min(n, total rows) — the
+    first n rows in shard order, i.e. the global top-n after a Sort."""
 
     child: Node
     n: int
@@ -118,6 +129,11 @@ class Join(Node):
     shuffle_seed: int | None = None  # resolved by the optimizer
     skip_left_shuffle: bool = False
     skip_right_shuffle: bool = False
+    # range fast path (set by the optimizer): the named side is range-
+    # partitioned on align_keys (a prefix of `on`); the other side is
+    # range-ALIGNED to its boundaries instead of hash-shuffled.
+    align: str | None = None          # None | "left" | "right"
+    align_keys: tuple[str, ...] | None = None
 
 
 @dataclass(frozen=True)
@@ -407,12 +423,24 @@ def _pushdown_projections(node: Node, needed: set[str] | None,
 
 
 # ---------------------------------------------------------------------------
-# optimizer pass 4: shuffle elision via Partitioning tags
+# optimizer pass 4: shuffle elision via Partitioning/RangePartitioning tags
 # ---------------------------------------------------------------------------
 
 
+def _range_fp(node: Node):
+    """Plan-internal splitter provenance: the canonical form of the subtree
+    that computes the splitters. Two structurally identical subtrees in ONE
+    plan see the same inputs and are deterministic, so equal fingerprints
+    imply equal placement. None (uncanonicalizable subtree) never matches.
+    """
+    try:
+        return ("plan", _canon(node))
+    except _Uncacheable:
+        return None
+
+
 def _elide(node: Node, p: int, an: _Analysis
-           ) -> tuple[Node, Partitioning | None]:
+           ) -> tuple[Node, Partitioning | RangePartitioning | None]:
     if isinstance(node, Scan):
         part = node.partitioning
         if part is not None and part.num_partitions != p:
@@ -440,30 +468,59 @@ def _elide(node: Node, p: int, an: _Analysis
         # inner/left outputs keep true key values on their hash shard;
         # right/full emit unmatched-side rows whose (left-sourced) key
         # columns are zero-filled, so NO placement tag survives them.
+        inner_ish = node.how in ("inner", "left")
+
         def out_part(seed):
-            if node.how in ("inner", "left"):
+            if inner_ish:
                 return Partitioning(node.on, p, seed)
             return None
         if p == 1:
             out = replace(node, left=l, right=r, skip_left_shuffle=True,
                           skip_right_shuffle=True, shuffle_seed=node.seed)
             return out, out_part(node.seed)
+        l_range = range_prefix_matches(lp, node.on)
+        r_range = range_prefix_matches(rp, node.on)
+        # both sides range-partitioned by the SAME splitter computation:
+        # equal keys already colocated everywhere, skip both shuffles
+        if l_range and r_range and lp == rp and lp.fingerprint is not None:
+            out = replace(node, left=l, right=r, skip_left_shuffle=True,
+                          skip_right_shuffle=True, shuffle_seed=node.seed)
+            return out, (lp if inner_ish else None)
         target = None
-        if lp is not None and lp.keys == node.on:
+        if isinstance(lp, Partitioning) and lp.keys == node.on:
             target = lp
-        elif rp is not None and rp.keys == node.on:
+        elif isinstance(rp, Partitioning) and rp.keys == node.on:
             target = rp
-        if target is None:
-            target = Partitioning(node.on, p, node.seed)
-        out = replace(node, left=l, right=r, skip_left_shuffle=lp == target,
-                      skip_right_shuffle=rp == target,
-                      shuffle_seed=target.seed)
-        return out, out_part(target.seed)
+        if target is not None:
+            out = replace(node, left=l, right=r,
+                          skip_left_shuffle=lp == target,
+                          skip_right_shuffle=rp == target,
+                          shuffle_seed=target.seed)
+            return out, out_part(target.seed)
+        # one side range-partitioned (sort output): keep its placement and
+        # range-ALIGN the other side to its boundaries — one AllToAll
+        # instead of two, and the range placement survives the join
+        if l_range:
+            out = replace(node, left=l, right=r, skip_left_shuffle=True,
+                          align="left", align_keys=lp.keys,
+                          shuffle_seed=node.seed)
+            return out, (lp if inner_ish else None)
+        if r_range:
+            out = replace(node, left=l, right=r, skip_right_shuffle=True,
+                          align="right", align_keys=rp.keys,
+                          shuffle_seed=node.seed)
+            return out, (rp if inner_ish else None)
+        out = replace(node, left=l, right=r, skip_left_shuffle=False,
+                      skip_right_shuffle=False, shuffle_seed=node.seed)
+        return out, out_part(node.seed)
     if isinstance(node, GroupBy):
         c, cp = _elide(node.child, p, an)
         # any hash partitioning on exactly the group keys colocates each
-        # key on one shard — seed-independent, unlike the join fast path
-        matches = cp is not None and cp.keys == node.keys
+        # key on one shard — seed-independent, unlike the join fast path;
+        # a range partitioning on a PREFIX of the keys colocates them too
+        # (placement is a function of the prefix tuple)
+        matches = (isinstance(cp, Partitioning) and cp.keys == node.keys) \
+            or range_prefix_matches(cp, node.keys)
         if p == 1 or matches:
             out = replace(node, child=c, skip_shuffle=True,
                           shuffle_seed=node.seed)
@@ -472,9 +529,21 @@ def _elide(node: Node, p: int, an: _Analysis
         out = replace(node, child=c, shuffle_seed=node.seed)
         return out, Partitioning(node.keys, p, node.seed)
     if isinstance(node, Sort):
-        c, _ = _elide(node.child, p, an)
-        # range partitioning is data-dependent: no hash tag survives
-        return replace(node, child=c, skip_shuffle=p == 1), None
+        c, cp = _elide(node.child, p, an)
+        # an input range-partitioned on a by-prefix (equal prefixes
+        # colocated, shard ranges ordered) — or on an EXTENSION of `by`
+        # (placement refines the requested order) — already has the right
+        # global placement: a local sort alone yields the global order,
+        # and the input's placement tag survives untouched
+        el = range_prefix_matches(cp, node.by) or (
+            isinstance(cp, RangePartitioning)
+            and node.by == cp.keys[:len(node.by)])
+        if el:
+            return replace(node, child=c, skip_shuffle=True), cp
+        out = replace(node, child=c, skip_shuffle=p == 1)
+        # the shuffle (or the single-shard identity) leaves the output
+        # range-partitioned on `by`; fingerprint = the producing subtree
+        return out, RangePartitioning(node.by, p, _range_fp(out))
     if isinstance(node, SetOp):
         l, lp = _elide(node.left, p, an)
         r, rp = _elide(node.right, p, an)
@@ -484,9 +553,9 @@ def _elide(node: Node, p: int, an: _Analysis
                           skip_right_shuffle=True)
             return out, Partitioning(keys, p, node.seed)
         target = None
-        if lp is not None and lp.keys == keys:
+        if isinstance(lp, Partitioning) and lp.keys == keys:
             target = lp
-        elif rp is not None and rp.keys == keys:
+        elif isinstance(rp, Partitioning) and rp.keys == keys:
             target = rp
         elided_seed = target.seed if target is not None else node.seed
         if target is None:
@@ -498,7 +567,11 @@ def _elide(node: Node, p: int, an: _Analysis
     if isinstance(node, Distinct):
         c, cp = _elide(node.child, p, an)
         keys = tuple(sorted(an.schema(node.child)))
-        matches = cp is not None and cp.keys == keys  # seed-independent
+        # hash on exactly the whole row (seed-independent) colocates
+        # duplicates; so does ANY range partitioning — its keys are a
+        # subset of the row, and equal rows have equal key tuples
+        matches = (isinstance(cp, Partitioning) and cp.keys == keys) \
+            or isinstance(cp, RangePartitioning)
         skip = p == 1 or matches
         part = cp if matches else Partitioning(keys, p, node.seed)
         return replace(node, child=c, skip_shuffle=skip), part
@@ -507,7 +580,7 @@ def _elide(node: Node, p: int, an: _Analysis
 
 def optimize_with_partitioning(
         plan: Node, input_schemas: Sequence[dict], num_shards: int
-) -> tuple[Node, Partitioning | None]:
+) -> tuple[Node, Partitioning | RangePartitioning | None]:
     """All passes: probe -> predicate pushdown -> projection pushdown ->
     shuffle elision. Pure plan-to-plan; safe to golden-test offline.
     Also returns the result's static placement (one elision walk serves
@@ -525,7 +598,8 @@ def optimize(plan: Node, input_schemas: Sequence[dict], num_shards: int
 
 
 def output_partitioning(plan: Node, input_schemas: Sequence[dict],
-                        num_shards: int) -> Partitioning | None:
+                        num_shards: int
+                        ) -> Partitioning | RangePartitioning | None:
     """Static placement of the plan's result (tags the output DistTable)."""
     _, part = _elide(plan, num_shards, _Analysis(input_schemas))
     return part
@@ -618,7 +692,11 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
         if isinstance(node, Project):
             return L.project(run(node.child), list(node.columns))
         if isinstance(node, Limit):
-            return L.head(run(node.child), node.n)
+            t = run(node.child)
+            out, st = D.dist_limit(t, node.n, axis_name=axis_name,
+                                   report=report)
+            stats.extend(st)
+            return out
         if isinstance(node, Repartition):
             t = run(node.child)
             out, st = D.dist_repartition_by(
@@ -631,6 +709,15 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
             lt, rt = run(node.left), run(node.right)
             cb = node.bucket_capacity or max(
                 cap(lt, None), cap(rt, None))
+            if node.bucket_capacity is None and node.align is not None:
+                # range alignment is skew-prone in a way hash is not: ALL
+                # of a source shard's rows may target one anchor range. A
+                # bucket covering the shuffled side's whole capacity makes
+                # a one-destination pileup unoverflowable (the same sizing
+                # data/pipeline.py uses by hand); hash defaults would drop
+                # rows silently under key skew.
+                shuffled = rt if node.align == "left" else lt
+                cb = max(cb, shuffled.capacity)
             # default output budget = what a fully-shuffled join would get
             # (each operand lands at p*cb rows after repartition), so an
             # elided shuffle never shrinks the truncation budget relative
@@ -644,7 +731,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                 out_capacity=out_capacity, seed=node.seed,
                 shuffle_seed=node.shuffle_seed,
                 skip_left_shuffle=node.skip_left_shuffle,
-                skip_right_shuffle=node.skip_right_shuffle, report=report)
+                skip_right_shuffle=node.skip_right_shuffle,
+                align=node.align, align_keys=node.align_keys, report=report)
             stats.extend(st)
             return out
         if isinstance(node, GroupBy):
@@ -715,8 +803,10 @@ def explain(plan: Node) -> str:
         pad = "  " * depth
         if isinstance(node, Scan):
             part = ""
-            if node.partitioning is not None:
-                pt = node.partitioning
+            pt = node.partitioning
+            if isinstance(pt, RangePartitioning):
+                part = f", partitioned=range{pt.keys}/{pt.num_partitions}"
+            elif pt is not None:
                 part = (f", partitioned=hash{pt.keys}%"
                         f"{pt.num_partitions}@seed{pt.seed}")
             lines.append(f"{pad}Scan(slot={node.slot}{part})")
@@ -732,11 +822,14 @@ def explain(plan: Node) -> str:
                          f"seed={node.seed}, "
                          f"shuffle={_shuffle_word(node.skip_shuffle)})")
         elif isinstance(node, Join):
+            extra = ""
+            if node.align is not None:
+                extra = f", align={node.align}{node.align_keys}"
             lines.append(
                 f"{pad}Join(on={node.on}, how={node.how}, "
                 f"algorithm={node.algorithm}, "
                 f"left={_shuffle_word(node.skip_left_shuffle)}, "
-                f"right={_shuffle_word(node.skip_right_shuffle)})")
+                f"right={_shuffle_word(node.skip_right_shuffle)}{extra})")
         elif isinstance(node, GroupBy):
             lines.append(
                 f"{pad}GroupBy(keys={node.keys}, aggs={node.pairs}, "

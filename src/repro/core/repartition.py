@@ -18,6 +18,8 @@ Runs inside ``shard_map`` (BSP lockstep = SPMD).
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 from typing import NamedTuple
 
 import jax
@@ -47,6 +49,51 @@ class Partitioning(NamedTuple):
     keys: tuple[str, ...]   # key columns, in the order they were hashed
     num_partitions: int     # the modulus (== mesh axis size when created)
     seed: int               # murmur3 seed of the partitioning hash
+
+
+@dataclasses.dataclass(frozen=True)
+class RangePartitioning:
+    """Static placement metadata for range-partitioned tables (sort output).
+
+    Rows live on shard ``f(keys)`` for a *monotone lexicographic* placement
+    function f: shard i's key tuples are all <= shard i+1's, and equal key
+    tuples are colocated (``dist_sort``'s splitter assignment is a pure
+    function of the key tuple). Unlike the hash tag the splitters are
+    data-dependent, so the tag does not name them — downstream operators
+    that must co-place a second table re-derive the shard boundaries from
+    the tagged table itself (per-shard key maxima, an all_gather of p
+    scalars, not an AllToAll — see ``ops_dist._range_align_pid``).
+
+    ``fingerprint`` is splitter provenance: two tags compare equal (and a
+    join may skip BOTH shuffles) only when they provably came from the same
+    splitter computation over the same data. Plan-internal tags use the
+    canonical form of the producing subtree; materialized DistTables get a
+    fresh unique token so tables from different executions never
+    false-match. A deliberate dataclass (not NamedTuple): tuple equality
+    would let a RangePartitioning compare equal to a hash ``Partitioning``
+    with coincident fields.
+    """
+
+    keys: tuple[str, ...]   # key columns, lexicographic significance order
+    num_partitions: int     # number of range buckets (== mesh axis size)
+    fingerprint: object     # hashable provenance token, or None (unknown)
+
+
+_FINGERPRINTS = itertools.count()
+
+
+def fresh_range_fingerprint() -> tuple:
+    """Unique provenance token for a materialized range-partitioned table."""
+    return ("table", next(_FINGERPRINTS))
+
+
+def range_prefix_matches(part, keys: tuple[str, ...]) -> bool:
+    """True when ``part`` is a RangePartitioning whose key columns are a
+    prefix of ``keys`` — the placement is then a function of a prefix of
+    the operator's keys, so equal operator-key tuples are colocated."""
+    return (isinstance(part, RangePartitioning)
+            and len(part.keys) <= len(keys)
+            and part.keys == tuple(keys[:len(part.keys)]))
 
 
 def zero_shuffle_stats() -> ShuffleStats:

@@ -95,7 +95,9 @@ class RelationalTokenPipeline:
 
     def _etl_frame(self, samples: Table, labels: Table):
         """The fused relational chain (select -> join -> project -> limit),
-        one shard_map program via LazyFrame.collect().
+        one shard_map program via LazyFrame.collect(). The trailing
+        ``limit`` is a true GLOBAL head-n, so a round yields at most
+        exactly ``global_batch`` rows across all shards (not per shard).
 
         Capacities are skew-proof: the join's shuffle bucket holds a whole
         shard's rows (a one-source->one-destination pileup cannot overflow)

@@ -71,17 +71,21 @@ def segment_reduce(
     assert op in ("sum", "min", "max"), op
     assert seg_ids.ndim == 1 and values.shape[0] == seg_ids.shape[0], (
         values.shape, seg_ids.shape)
-    kernel_ok = values.ndim == 1 and num_segments <= MAX_SEGMENTS and \
-        values.dtype in (jnp.float32, jnp.int32)
+    shape_ok = values.ndim == 1 and values.dtype in (jnp.float32, jnp.int32)
+    kernel_ok = shape_ok and num_segments <= MAX_SEGMENTS
     if use_kernel is None:
         use_kernel = kernel_ok
-    elif use_kernel and not kernel_ok:
+    elif use_kernel and not shape_ok:
         raise ValueError(
-            f"segment_reduce kernel needs 1-D f32/i32 values and "
-            f"num_segments <= {MAX_SEGMENTS}; got shape={values.shape} "
-            f"dtype={values.dtype} num_segments={num_segments}. Pass a "
-            f"tighter out_capacity (groupby) or use_kernel=None for the "
-            f"XLA fallback.")
+            f"segment_reduce kernel needs 1-D f32/i32 values; got "
+            f"shape={values.shape} dtype={values.dtype}. Use "
+            f"use_kernel=None for the XLA fallback.")
+    elif use_kernel and num_segments > MAX_SEGMENTS:
+        # an oversize segment count is a data-scale property, not a caller
+        # bug: route to the bit-identical XLA scatter path rather than
+        # failing (or worse, truncating) inside the Pallas kernel's VMEM
+        # budget
+        use_kernel = False
     if use_kernel:
         return segment_reduce_tiles(values, seg_ids, num_segments, op)
     init = ref.seg_init(op, values.dtype)

@@ -84,7 +84,15 @@ def segment_reduce_tiles(
     assert op in OPS, op
     assert values.ndim == 1 and values.shape == seg_ids.shape, (
         values.shape, seg_ids.shape)
-    assert num_segments <= MAX_SEGMENTS, (num_segments, MAX_SEGMENTS)
+    if num_segments > MAX_SEGMENTS:
+        # hard error (not an assert stripped by -O): the (rows, G) one-hot
+        # would exceed the kernel's VMEM tile budget — silently wrong or
+        # OOM. kernels/ops.py::segment_reduce routes oversize calls to the
+        # XLA scatter fallback before reaching here.
+        raise ValueError(
+            f"segment_reduce_tiles: num_segments={num_segments} exceeds "
+            f"MAX_SEGMENTS={MAX_SEGMENTS}; call kernels.ops.segment_reduce "
+            f"for the XLA fallback routing")
     if interpret is None:
         interpret = interpret_mode()
     (n,) = values.shape

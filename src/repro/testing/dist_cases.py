@@ -189,6 +189,140 @@ def case_plan_fused():
     }
 
 
+def case_sort_chain():
+    """Range-partition provenance: fused sort->join (sort-merge) keeps the
+    sorted side in place and range-aligns the other side — exactly one
+    fewer AllToAll than eager, identical row multiset — and the range tag
+    survives the join so a chained groupby elides its shuffle too."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+
+    def int_table(n, kr, seed):
+        rng = np.random.default_rng(seed)
+        return Table.from_arrays({
+            "k": rng.integers(0, kr, n).astype(np.int32),
+            "d0": rng.integers(-40, 40, n).astype(np.float32)})
+
+    cap, kr = 500, 4000  # sparse join: no truncation on either path
+    orders = ctx.from_local_parts([int_table(cap, kr, 300 + i)
+                                   for i in range(p)])
+    users = ctx.from_local_parts([int_table(cap, kr, 400 + i)
+                                  for i in range(p)])
+    bucket = 2 * cap
+
+    erep: list = []
+    s_e, (st_s,) = ctx.sort(orders, "k", bucket_capacity=bucket, report=erep)
+    e_out, (sl, sr) = ctx.join(s_e, users, "k", algorithm="sort",
+                               bucket_capacity=bucket, report=erep)
+    eager_overflow = sum(int(np.asarray(x.overflow).sum())
+                         for x in (st_s, sl, sr))
+
+    fused = (ctx.frame(orders).sort("k", bucket_capacity=bucket)
+             .join(ctx.frame(users), "k", algorithm="sort",
+                   bucket_capacity=bucket))
+    frep = fused.plan_report()
+    f_out, f_stats = fused.collect_with_stats()
+    fused_overflow = sum(int(np.asarray(x.overflow).sum()) for x in f_stats)
+
+    from repro.testing.compare import tables_bitwise_equal
+    out = {
+        "identical": tables_bitwise_equal(e_out, f_out),
+        "rows": int(f_out.global_rows()),
+        "eager_overflow": eager_overflow,
+        "fused_overflow": fused_overflow,
+        "eager_alltoall": sum(not r["elided"] for r in erep),
+        "fused_alltoall": sum(not r["elided"] for r in frep),
+    }
+
+    # eager provenance: ctx.sort's RangePartitioning tag rides the frame()
+    # boundary, so the downstream groupby elides its shuffle entirely
+    gb = ctx.frame(s_e).groupby("k", (("d0", "sum"), ("d0", "count")))
+    gb_rep = gb.plan_report()
+    g_f = gb.collect()
+    g_e, _ = ctx.groupby(s_e, "k", (("d0", "sum"), ("d0", "count")))
+    out["groupby_elided"] = all(r["elided"] for r in gb_rep)
+    out["groupby_identical"] = tables_bitwise_equal(g_e, g_f)
+    return out
+
+
+def case_sort_align_skew():
+    """Regression: the range-align join must survive probe-side key skew
+    with DEFAULT bucket sizing. Every probe row here targets a single
+    anchor range; hash-sized buckets (~2*cap/p per destination) would
+    silently drop most of them pre-join, diverging from eager."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    rng = np.random.default_rng(23)
+    anchor = ctx.from_local_parts([Table.from_arrays({
+        "k": rng.integers(0, 1_000_000, 400).astype(np.int32),
+        "d0": rng.integers(-9, 9, 400).astype(np.float32)})
+        for _ in range(p)])
+    probe = ctx.from_local_parts([Table.from_arrays({
+        "k": rng.integers(600_000, 600_100, 300).astype(np.int32),
+        "d0": rng.integers(-9, 9, 300).astype(np.float32)})
+        for _ in range(p)])
+
+    s, _ = ctx.sort(anchor, "k")
+    eager, _ = ctx.join(s, probe, "k")
+    fused = ctx.frame(anchor).sort("k").join(ctx.frame(probe), "k")
+    f_out, f_stats = fused.collect_with_stats()
+
+    from repro.testing.compare import tables_bitwise_equal
+    return {
+        "identical": tables_bitwise_equal(eager, f_out),
+        "fused_overflow": sum(int(np.asarray(x.overflow).sum())
+                              for x in f_stats),
+        "rows": int(f_out.global_rows()),
+    }
+
+
+def case_global_limit():
+    """Global limit == the local oracle: head-n of the shard-order
+    concatenation on unordered plans, the true top-n (bit-identical) after
+    sort — never the per-shard heads."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    rng = np.random.default_rng(17)
+    n_per = 200
+    # unique keys: the global top-n is a unique row set, so the oracle
+    # comparison is bit-exact even through the distributed sort
+    keys = rng.permutation(p * n_per).astype(np.int32)
+    d0 = rng.integers(-99, 99, p * n_per).astype(np.float32)
+    parts = [Table.from_arrays({"k": keys[i * n_per:(i + 1) * n_per],
+                                "d0": d0[i * n_per:(i + 1) * n_per]})
+             for i in range(p)]
+    dt = ctx.from_local_parts(parts)
+
+    out = {"ok": True, "checked": []}
+    for n in (0, 1, 7, 64, n_per + 3, p * n_per, p * n_per + 50):
+        got = ctx.limit(dt, n).to_table().to_numpy()
+        expect = min(n, p * n_per)
+        head_ok = (len(got["k"]) == expect
+                   and np.array_equal(got["k"], keys[:expect])
+                   and np.array_equal(got["d0"], d0[:expect]))
+
+        topn = (ctx.frame(dt).sort("k").limit(n).collect()
+                .to_table().to_numpy())
+        order = np.argsort(keys, kind="stable")
+        top_ok = (np.array_equal(topn["k"], keys[order][:expect])
+                  and np.array_equal(topn["d0"], d0[order][:expect]))
+        out["ok"] = out["ok"] and head_ok and top_ok
+        out["checked"].append([n, bool(head_ok), bool(top_ok)])
+
+    # the limit node must be attributed in the wire accounting at 0 bytes
+    rep = ctx.frame(dt).sort("k").limit(9).plan_report()
+    lim = [r for r in rep if r["op"] == "limit"]
+    out["limit_reported_zero"] = (len(lim) == 1
+                                  and lim[0]["wire_bytes"] == 0)
+    return out
+
+
 def case_sort_multikey():
     """Multi-key distributed sort: global lexicographic order across shards,
     row multiset preserved."""

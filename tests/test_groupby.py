@@ -82,6 +82,24 @@ def test_segment_reduce_empty_segments_hold_identity():
     assert out[0] == 1.0 and np.all(np.isinf(out[1:]))
 
 
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_segment_reduce_oversize_routes_to_fallback(op):
+    # num_segments beyond the Pallas kernel's VMEM budget must route to the
+    # bit-identical XLA scatter path — even when the kernel was requested —
+    # never fail (or truncate) inside the kernel
+    n, g = 4000, kops.MAX_SEGMENTS + 300
+    vals = jnp.asarray(RNG.integers(-40, 40, n), jnp.int32)
+    seg = jnp.asarray(RNG.integers(-1, g, n), jnp.int32)
+    want = np.asarray(ref.segment_reduce_ref(vals, seg, g, op))
+    for use_kernel in (None, True, False):
+        got = np.asarray(kops.segment_reduce(vals, seg, g, op,
+                                             use_kernel=use_kernel))
+        np.testing.assert_array_equal(got, want)
+    # the raw kernel itself refuses loudly rather than truncating
+    with pytest.raises(ValueError, match="MAX_SEGMENTS"):
+        segment_reduce_tiles(vals, seg, g, op)
+
+
 # --- local groupby vs oracle -------------------------------------------------
 
 
@@ -177,11 +195,13 @@ def test_groupby_kernel_on_large_table_via_out_capacity():
     check_vs_oracle(out, cols, ["k"], ALL_AGGS)
 
 
-def test_segment_reduce_forced_kernel_over_limit_raises():
-    vals = jnp.zeros((8,), jnp.float32)
-    seg = jnp.zeros((8,), jnp.int32)
-    with pytest.raises(ValueError, match="num_segments"):
-        kops.segment_reduce(vals, seg, 5000, "sum", use_kernel=True)
+def test_segment_reduce_forced_kernel_shape_mismatch_still_raises():
+    # oversize segment counts now route to the fallback (see the oversize
+    # test above); a shape/dtype the kernel can never take still errors
+    with pytest.raises(ValueError, match="1-D"):
+        kops.segment_reduce(jnp.zeros((8, 2), jnp.float32),
+                            jnp.zeros((8,), jnp.int32), 4, "sum",
+                            use_kernel=True)
 
 
 # --- two-phase decomposition (the distributed combine path, run locally) ------

@@ -16,7 +16,7 @@ import pytest
 
 from repro.core import plan as PL
 from repro.core.context import DistContext
-from repro.core.repartition import Partitioning
+from repro.core.repartition import Partitioning, RangePartitioning
 from repro.core.table import Table
 
 I32, F32 = jnp.dtype(jnp.int32), jnp.dtype(jnp.float32)
@@ -159,6 +159,105 @@ def test_mismatched_modulus_blocks_elision():
     assert not opt.skip_shuffle
 
 
+def test_range_tag_not_equal_to_hash_tag():
+    # RangePartitioning is a dataclass precisely so coincident fields never
+    # tuple-compare equal to a hash Partitioning (NamedTuple == tuple)
+    assert Partitioning(("k",), 8, 7) != RangePartitioning(("k",), 8, 7)
+    assert RangePartitioning(("k",), 8, 7) != Partitioning(("k",), 8, 7)
+
+
+def test_sort_join_range_aligns_one_side():
+    # the tentpole golden shape: sort(k) -> join(on=k) keeps the sorted
+    # side in place and range-aligns the other — ONE AllToAll for the join
+    plan = PL.Join(PL.Sort(PL.Scan(0), ("k",)), PL.Scan(1), ("k",),
+                   algorithm="sort")
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert opt.skip_left_shuffle and not opt.skip_right_shuffle
+    assert opt.align == "left" and opt.align_keys == ("k",)
+    assert "align=left" in PL.explain(opt)
+    # mirrored: the sorted side on the right
+    plan = PL.Join(PL.Scan(0), PL.Sort(PL.Scan(1), ("k",)), ("k",))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert opt.skip_right_shuffle and opt.align == "right"
+
+
+def test_sort_join_range_alignment_key_prefix_only():
+    # range keys must be a PREFIX of the join keys (placement is a function
+    # of the prefix); sort on a non-prefix key must not elide
+    plan = PL.Join(PL.Sort(PL.Scan(0), ("d0",)), PL.Scan(1), ("k",))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert opt.align is None
+    assert not opt.skip_left_shuffle and not opt.skip_right_shuffle
+
+
+def test_sort_output_partitioning_and_groupby_elision():
+    part = PL.output_partitioning(PL.Sort(PL.Scan(0), ("k", "d0")),
+                                  [ORDERS], 8)
+    assert isinstance(part, RangePartitioning)
+    assert part.keys == ("k", "d0") and part.num_partitions == 8
+    # groupby on keys that EXTEND the range prefix elides (prefix rule) ...
+    plan = PL.GroupBy(PL.Sort(PL.Scan(0), ("k",)), ("k", "d1"),
+                      (("d0", "sum"),))
+    assert PL.optimize(plan, [ORDERS], 8).skip_shuffle
+    # ... but a range partitioning on (k, d0) does NOT satisfy keys (k,):
+    # equal k can straddle shards when d0 differs
+    plan = PL.GroupBy(PL.Sort(PL.Scan(0), ("k", "d0")), ("k",),
+                      (("d1", "sum"),))
+    assert not PL.optimize(plan, [ORDERS], 8).skip_shuffle
+
+
+def test_sort_sort_elision_both_directions():
+    # by a prefix of the range keys, and by an extension of them
+    for outer in (("k",), ("k", "d0", "d1")):
+        plan = PL.Sort(PL.Sort(PL.Scan(0), ("k", "d0")), outer)
+        opt = PL.optimize(plan, [ORDERS], num_shards=8)
+        assert opt.skip_shuffle, outer
+    plan = PL.Sort(PL.Sort(PL.Scan(0), ("d0",)), ("k",))
+    assert not PL.optimize(plan, [ORDERS], 8).skip_shuffle
+
+
+def test_limit_preserves_range_tag_project_kills_it():
+    # limit only drops rows: the surviving placement still satisfies a
+    # downstream groupby; projecting a range key away kills the tag
+    plan = PL.GroupBy(PL.Limit(PL.Sort(PL.Scan(0), ("k",)), 10), ("k",),
+                      (("d0", "sum"),))
+    assert PL.optimize(plan, [ORDERS], 8).skip_shuffle
+    plan = PL.GroupBy(
+        PL.Project(PL.Sort(PL.Scan(0), ("k",)), ("d0",)),
+        ("d0",), (("d0", "count"),))
+    assert not PL.optimize(plan, [ORDERS], 8).skip_shuffle
+
+
+def test_scan_range_tag_from_materialized_sort():
+    # a Scan carrying a RangePartitioning (eager ctx.sort output) feeds the
+    # same elision rules as a plan-internal Sort
+    part = RangePartitioning(("k",), 8, ("table", 999))
+    plan = PL.GroupBy(PL.Scan(0, partitioning=part), ("k",),
+                      (("d0", "sum"),))
+    assert PL.optimize(plan, [ORDERS], 8).skip_shuffle
+    # mismatched modulus: dropped, shuffle stays
+    part4 = RangePartitioning(("k",), 4, ("table", 999))
+    plan = PL.GroupBy(PL.Scan(0, partitioning=part4), ("k",),
+                      (("d0", "sum"),))
+    assert not PL.optimize(plan, [ORDERS], 8).skip_shuffle
+
+
+def test_self_join_same_range_fingerprint_skips_both():
+    part = RangePartitioning(("k",), 8, ("table", 7))
+    plan = PL.Join(PL.Scan(0, partitioning=part),
+                   PL.Scan(1, partitioning=part), ("k",))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert opt.skip_left_shuffle and opt.skip_right_shuffle
+    assert opt.align is None
+    # different fingerprints = different splitters: align, don't skip both
+    other = RangePartitioning(("k",), 8, ("table", 8))
+    plan = PL.Join(PL.Scan(0, partitioning=part),
+                   PL.Scan(1, partitioning=other), ("k",))
+    opt = PL.optimize(plan, [ORDERS, USERS], num_shards=8)
+    assert opt.skip_left_shuffle and not opt.skip_right_shuffle
+    assert opt.align == "left"
+
+
 def test_single_shard_elides_everything():
     plan = PL.Sort(PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
                               ("k",), (("d0", "sum"),)), ("k",))
@@ -266,6 +365,53 @@ def test_lazy_sort_and_limit(ctx):
     ref = t.to_numpy()
     order = np.lexsort((ref["d0"], ref["k"]))
     np.testing.assert_array_equal(d["k"], ref["k"][order][:10])
+
+
+def test_global_limit_matches_oracle(ctx):
+    # limit(n) == the first n rows of the global table, for every n regime
+    t = int_table(120, 40, 71)
+    dt = ctx.scatter(t)
+    ref = t.to_numpy()
+    for n in (0, 1, 13, 120, 200):
+        d = ctx.limit(dt, n).to_table().to_numpy()
+        assert len(d["k"]) == min(n, 120), n
+        np.testing.assert_array_equal(d["k"], ref["k"][:n])
+        lazy = ctx.frame(dt).limit(n).collect().to_table().to_numpy()
+        np.testing.assert_array_equal(lazy["k"], ref["k"][:n])
+
+
+def test_fused_sort_join_matches_eager(ctx):
+    # sort -> sort-merge join: the range fast path vs eager's re-shuffles
+    a = ctx.scatter(int_table(200, 300, 81))
+    b = ctx.scatter(int_table(200, 300, 82))
+    s, _ = ctx.sort(a, "k")
+    eager, _ = ctx.join(s, b, "k", algorithm="sort")
+    fused = (ctx.frame(a).sort("k")
+             .join(ctx.frame(b), "k", algorithm="sort"))
+    assert_tables_equal(eager, fused.collect())
+
+
+def test_eager_sort_tag_rides_frame_boundary(ctx):
+    # ctx.sort tags its output; a frame over it elides the groupby shuffle
+    s, _ = ctx.sort(ctx.scatter(int_table(150, 30, 91)), "k")
+    assert isinstance(s.partitioning, RangePartitioning)
+    assert s.partitioning.keys == ("k",)
+    f = ctx.frame(s).groupby("k", (("d0", "sum"),))
+    assert all(r["elided"] for r in f.plan_report())
+    eager, _ = ctx.groupby(s, "k", (("d0", "sum"),))
+    assert_tables_equal(eager, f.collect())
+    # two materializations never share splitter provenance
+    s2, _ = ctx.sort(ctx.scatter(int_table(150, 30, 92)), "k")
+    assert s.partitioning.fingerprint != s2.partitioning.fingerprint
+
+
+def test_plan_report_attributes_limit_at_zero_bytes(ctx):
+    rep = (ctx.frame(ctx.scatter(int_table(64, 16, 93)))
+           .sort("k").limit(5).plan_report())
+    ops = [r["op"] for r in rep]
+    assert "sort" in ops and "limit" in ops, ops
+    lim = rep[ops.index("limit")]
+    assert lim["elided"] and lim["wire_bytes"] == 0 and lim["bucket"] == 0
 
 
 def test_co_partitioned_fast_path_matches_shuffled(ctx):
