@@ -9,6 +9,7 @@ Sections:
   groupby strategies: shuffle vs two-phase (bench_groupby)
   lazy plan fusion: fused vs eager ETL chain (bench_plan)
   sort->join chains: range provenance vs re-shuffling (bench_sort_chain)
+  cost-model planning: stats-driven strategy + sizing (bench_cost)
   Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
 
 --json writes every section's tables as machine-readable records (the
@@ -31,9 +32,10 @@ def main() -> None:
     quick = args.quick
 
     t0 = time.perf_counter()
-    from benchmarks import (bench_binding_overhead, bench_groupby,
-                            bench_kernels, bench_plan, bench_scaling,
-                            bench_sort_chain, bench_vs_baselines)
+    from benchmarks import (bench_binding_overhead, bench_cost,
+                            bench_groupby, bench_kernels, bench_plan,
+                            bench_scaling, bench_sort_chain,
+                            bench_vs_baselines)
 
     print(f"# benchmark run (quick={quick})")
     sections = [
@@ -43,6 +45,7 @@ def main() -> None:
         ("groupby", bench_groupby.main),
         ("plan", bench_plan.main),
         ("sort_chain", bench_sort_chain.main),
+        ("cost", bench_cost.main),
         ("scaling", bench_scaling.main),
     ]
     results: dict[str, list[dict]] = {}

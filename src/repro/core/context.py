@@ -41,9 +41,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import ops_agg as A
 from repro.core import plan as PL
+from repro.core import stats as ST
 from repro.core.repartition import (Partitioning, RangePartitioning,
                                     fresh_range_fingerprint)
-from repro.core.table import Table
+from repro.core.stats import TableStats
+from repro.core.table import KEY_DTYPES, Table
 from repro.utils import ceil_div
 
 
@@ -55,22 +57,30 @@ class DistTable:
     ``partitioning`` is static placement metadata (not a pytree leaf): when
     set, rows satisfy ``shard == hash(keys) % num_partitions`` — the
     invariant the plan optimizer uses to elide shuffles.
+
+    ``stats`` is static cardinality metadata (also not a leaf): exact
+    :class:`~repro.core.stats.TableStats` on a table that went through
+    :meth:`DistContext.analyze`, estimator-propagated stats on operator
+    outputs built from analyzed inputs, None otherwise. When present the
+    plan optimizer's cost model right-sizes shuffle buckets and picks
+    per-node strategies from it.
     """
 
     columns: dict[str, jax.Array]
     row_counts: jax.Array  # (num_shards,) int32
     partitioning: Partitioning | None = None
+    stats: "TableStats | None" = None
 
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
         return ((tuple(self.columns[n] for n in names), self.row_counts),
-                (names, self.partitioning))
+                (names, self.partitioning, self.stats))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        names, partitioning = aux
+        names, partitioning, stats = aux
         cols, rc = children
-        return cls(dict(zip(names, cols)), rc, partitioning)
+        return cls(dict(zip(names, cols)), rc, partitioning, stats)
 
     @property
     def num_shards(self) -> int:
@@ -121,6 +131,13 @@ class DistContext:
         self.mesh = mesh
         self.axis_name = axis_name
         self._cache: dict = {}
+        # how many cost-sized plans overflowed their estimated capacities
+        # and were re-run at conservative sizes (the overflow-retry path)
+        self.overflow_retries = 0
+        # canonical keys of cost-sized plans whose estimates already
+        # proved wrong: later collects go STRAIGHT to the safe plan (one
+        # conservative execution, not a doomed sized run + retry each time)
+        self._overflow_bad: set = set()
 
     # -- properties ---------------------------------------------------------
     @property
@@ -177,6 +194,44 @@ class DistContext:
         rc = jnp.asarray([int(t.row_count) for t in parts], jnp.int32)
         rc = jax.device_put(rc, NamedSharding(self.mesh, P(self.axis_name)))
         return DistTable(cols, rc)
+
+    # -- statistics (the cost-model input) -----------------------------------
+    def analyze(self, t: DistTable) -> DistTable:
+        """Compute exact :class:`~repro.core.stats.TableStats` for ``t``
+        in one cheap vectorized pass and cache them on the table.
+
+        Stats cover the global row count, exact per-shard max, and per
+        key column min/max plus an NDV sketch (hash-bitmap linear
+        counting — the murmur3 kernel already on the shuffle path). Every
+        plan built over the returned table is cost-sized: shuffle buckets
+        shrink to estimated occupancy, GroupBy picks ``shuffle`` vs
+        ``two_phase`` per node, joins budget their outputs by estimated
+        match count. Idempotent: a table that already carries stats is
+        returned as-is.
+        """
+        if t.stats is not None:
+            return t
+        p, c = t.num_shards, t.local_capacity
+        counts = np.asarray(t.row_counts)
+        rows = int(counts.sum())
+        names = tuple(k for k, v in sorted(t.columns.items())
+                      if v.ndim == 1 and v.dtype in KEY_DTYPES)
+
+        def sweep(cols, rc):
+            idx = jnp.arange(p * c)
+            valid = (idx % c) < rc[idx // c]
+            return ST.sketch_columns(cols, valid, names)
+
+        sk = jax.jit(sweep)({n: t.columns[n] for n in names}, t.row_counts)
+        cols = []
+        for n in names:
+            filled, lo, hi = sk[n]
+            cols.append((n, ST.ColumnStats(
+                ST.linear_count(int(filled), rows),
+                float(np.asarray(lo)), float(np.asarray(hi)))))
+        stats = TableStats(rows=float(rows), columns=tuple(cols),
+                           max_shard_rows=float(counts.max(initial=0)))
+        return dataclasses.replace(t, stats=stats)
 
     # -- the lazy builder ----------------------------------------------------
     def frame(self, table: Table | DistTable):
@@ -242,13 +297,41 @@ class DistContext:
         ``report``, when given, receives one static record per potential
         shuffle at TRACE time — a jit-cache hit leaves it empty (use
         ``LazyFrame.plan_report()`` for an always-filled dry run).
+
+        When any input carries TableStats the cost model sizes the plan's
+        capacities from cardinality ESTIMATES. Estimates can be wrong, so
+        this is the overflow-safe point: if a cost-sized plan reports
+        overflow ON A COST-SIZED CAPACITY (per-entry attribution via
+        ``plan.cost_sized_stats_mask`` — overflow on a user-set capacity
+        keeps the pre-existing surface-in-stats contract and never
+        triggers a retry), the plan is recompiled ONCE with the
+        estimate-derived capacities stripped and the remaining defaults
+        taken at the unoverflowable bound
+        (``execute_plan(..., safe_capacity=True)``) and re-run — never
+        wrong results. ``self.overflow_retries`` counts these; a plan key
+        that failed once goes straight to the safe plan on later collects
+        (single conservative execution), and outputs of a failed-estimate
+        run carry NO propagated stats, so downstream stages fall back to
+        conservative sizing instead of cascading the bad numbers.
+
+        Note the cost of safety: a cost-sized collect synchronizes on the
+        overflow counters (one host sync per dispatch). Latency-critical
+        loops that cannot afford it should pass explicit capacities or
+        skip ``analyze``.
         """
         p = self.num_shards
+        logical = plan
         schemas = [t.schema for t in tabs]
+        input_stats = [t.stats for t in tabs]
+        have_stats = any(s is not None for s in input_stats)
         if optimize:
-            plan, part = PL.optimize_with_partitioning(plan, schemas, p)
+            plan, part = PL.optimize_with_partitioning(
+                plan, schemas, p, input_stats=input_stats)
         else:
+            # eager one-node plans skip the logical rewrites but still get
+            # strategy resolution + capacity sizing from the cost model
             part = PL.output_partitioning(plan, schemas, p)
+            plan = PL.apply_cost_model(plan, schemas, p, input_stats)
         if isinstance(part, RangePartitioning):
             # materialized tables get a unique provenance token: two
             # executions of the same plan shape over different inputs have
@@ -256,14 +339,53 @@ class DistContext:
             part = dataclasses.replace(
                 part, fingerprint=fresh_range_fingerprint())
         key = PL.canonical_key(plan)
+        run_key = None if key is None else ("plan", key)
+        sized = have_stats and PL.plan_cost_sized(plan)
 
-        def body(*tables):
-            return PL.execute_plan(plan, tables, axis_name=self.axis_name,
-                                   num_shards=p, report=report)
+        def run_safe():
+            if optimize:
+                safe_plan, _ = PL.optimize_with_partitioning(
+                    logical, schemas, p)
+            else:
+                safe_plan = PL.apply_cost_model(logical, schemas, p, None)
+            safe_key = PL.canonical_key(safe_plan)
 
-        out, stats = self._run(None if key is None else ("plan", key),
-                               body, tabs)
-        return dataclasses.replace(out, partitioning=part), stats
+            def safe_body(*tables):
+                return PL.execute_plan(
+                    safe_plan, tables, axis_name=self.axis_name,
+                    num_shards=p, safe_capacity=True)
+
+            return self._run(
+                None if safe_key is None else ("plan-safe", safe_key),
+                safe_body, tabs)
+
+        bad_estimates = sized and run_key is not None \
+            and run_key in self._overflow_bad
+        if bad_estimates:
+            out, stats = run_safe()  # this plan's estimates already failed
+        else:
+            def body(*tables):
+                return PL.execute_plan(plan, tables,
+                                       axis_name=self.axis_name,
+                                       num_shards=p, report=report)
+
+            out, stats = self._run(run_key, body, tabs)
+            if sized:
+                mask = PL.cost_sized_stats_mask(plan)
+                if len(mask) != len(stats):  # defensive: never mis-attribute
+                    mask = [True] * len(stats)
+                overflow = sum(int(np.asarray(s.overflow).sum())
+                               for s, m in zip(stats, mask) if m)
+                if overflow > 0:
+                    bad_estimates = True
+                    self.overflow_retries += 1
+                    if run_key is not None:
+                        self._overflow_bad.add(run_key)
+                    out, stats = run_safe()
+        est = None
+        if have_stats and not bad_estimates:
+            est = PL.estimate_output_stats(plan, schemas, input_stats)
+        return dataclasses.replace(out, partitioning=part, stats=est), stats
 
     # -- pleasingly parallel operators (no network; paper §II-B-1/2) ----------
     def select(self, t: DistTable, predicate: Callable[[dict], jax.Array],
@@ -332,16 +454,20 @@ class DistContext:
                            seed=seed)
         return self._run_plan(plan, [a], report=report)
 
-    def groupby(self, t: DistTable, keys, aggs, *, strategy: str = "two_phase",
+    def groupby(self, t: DistTable, keys, aggs, *, strategy: str = "auto",
                 bucket_capacity=None, partial_capacity: int | None = None,
                 out_capacity: int | None = None, seed: int = 7,
                 report: list | None = None):
-        """Distributed GroupBy (strategy='two_phase' | 'shuffle').
+        """Distributed GroupBy (strategy='auto' | 'two_phase' | 'shuffle').
 
-        Two-phase (default, arXiv:2010.14596): per-shard partial aggregates
-        shuffle instead of raw rows — on low-cardinality keys pass a small
-        ``bucket_capacity`` (~cardinality x slack / shards) to shrink the
-        AllToAll wire volume accordingly. 'shuffle' moves every row.
+        'two_phase' (arXiv:2010.14596): per-shard partial aggregates
+        shuffle instead of raw rows — on low-cardinality keys this moves
+        ~cardinality rows per shard instead of every raw row. 'shuffle'
+        repartitions raw rows first. 'auto' (default) lets the cost model
+        pick per node from the key-NDV-vs-rows crossover when ``t``
+        carries stats (:meth:`analyze`), falling back to 'two_phase'
+        otherwise; with stats the AllToAll ``bucket_capacity`` is also
+        right-sized automatically instead of needing hand tuning.
         """
         keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
         pairs = A.normalize_aggs(aggs)  # canonical form: the jit-cache key

@@ -103,9 +103,15 @@ class LazyFrame:
                        out_capacity=out_capacity, seed=seed)
         return LazyFrame(self._ctx, node, inputs)
 
-    def groupby(self, keys, aggs, *, strategy: str = "two_phase",
+    def groupby(self, keys, aggs, *, strategy: str = "auto",
                 bucket_capacity=None, partial_capacity=None,
                 out_capacity=None, seed: int = 7) -> "LazyFrame":
+        """Keyed aggregation. ``strategy='auto'`` (default) defers the
+        shuffle-vs-two-phase choice to the optimizer's cost model: with
+        input stats (``ctx.analyze``) it compares estimated wire rows
+        (``rows`` vs ``shards * key NDV``, the arXiv:2010.14596
+        crossover) and right-sizes the AllToAll bucket; without stats it
+        resolves to the documented ``two_phase`` fallback."""
         keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
         pairs = A.normalize_aggs(aggs)
         node = PL.GroupBy(self._plan, keys_t, pairs, strategy=strategy,
@@ -165,13 +171,22 @@ class LazyFrame:
         return self._plan
 
     def optimized(self) -> PL.Node:
-        """The plan after all optimizer passes (what collect() executes)."""
+        """The plan after all optimizer passes (what collect() executes),
+        including the cost model's strategy/capacity choices when any
+        input carries TableStats (``ctx.analyze``)."""
         return PL.optimize(self._plan, [t.schema for t in self._inputs],
-                           self._ctx.num_shards)
+                           self._ctx.num_shards,
+                           [t.stats for t in self._inputs])
 
     def explain(self, *, optimize: bool = True) -> str:
+        """The plan tree, one node per line. On an optimized plan every
+        potential shuffle is marked ``alltoall``/``elided``; when inputs
+        carry stats each node is annotated with estimated rows and any
+        cost-model-chosen capacities (``bucket=``, ``out=``,
+        ``cost-sized``) — the audit trail for the physical plan."""
         plan = self.optimized() if optimize else self._plan
-        return PL.explain(plan)
+        return PL.explain(plan, [t.schema for t in self._inputs],
+                          [t.stats for t in self._inputs])
 
     def plan_report(self) -> list[dict]:
         """Static shuffle accounting of the optimized plan — one record per

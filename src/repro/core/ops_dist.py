@@ -185,6 +185,7 @@ def dist_join(
     skip_right_shuffle: bool = False,
     align: str | None = None,
     align_keys: Sequence[str] | None = None,
+    count_truncation: bool = False,
     report: list | None = None,
 ):
     """Distributed join = shuffle both sides by key hash, then local join.
@@ -201,6 +202,13 @@ def dist_join(
     using boundaries re-derived from the anchored side's data — one
     AllToAll for the whole join instead of two, and the sort's paid-for
     range placement survives into the join output.
+
+    ``count_truncation``: fold the local join's ``out_capacity``
+    truncation count into the right-side ShuffleStats overflow (stats
+    pytree shape unchanged). Set by the plan executor whenever the cost
+    model sized ``out_capacity`` from a cardinality *estimate*, so an
+    underestimate triggers the overflow-retry path instead of silently
+    returning a short result.
     """
     on_l = [on] if isinstance(on, str) else list(on)
     ps = seed if shuffle_seed is None else shuffle_seed
@@ -219,8 +227,14 @@ def dist_join(
                             bucket_capacity=bucket_capacity, seed=ps,
                             skip=skip_right_shuffle, report=report,
                             label="join.right", pid=rpid)
-    out = L.join(left2, right2, on_l, how=how, algorithm=algorithm,
-                 out_capacity=out_capacity, seed=seed + 1)
+    if count_truncation:
+        out, trunc = L.join(left2, right2, on_l, how=how,
+                            algorithm=algorithm, out_capacity=out_capacity,
+                            seed=seed + 1, with_overflow=True)
+        st_r = st_r._replace(overflow=st_r.overflow + trunc)
+    else:
+        out = L.join(left2, right2, on_l, how=how, algorithm=algorithm,
+                     out_capacity=out_capacity, seed=seed + 1)
     return out, (st_l, st_r)
 
 

@@ -251,6 +251,7 @@ def join(
     out_capacity: int | None = None,
     suffix: str = "_r",
     seed: int = 0,
+    with_overflow: bool = False,
     _hash_fn=None,
 ) -> Table:
     """Cylon Join — all four semantics, both paper algorithms.
@@ -262,6 +263,12 @@ def join(
 
     Output columns: all left columns + right columns (clashes suffixed).
     Unmatched side fills with 0 (static-shape NULL analog; see DESIGN.md).
+
+    ``with_overflow``: also return an int32 scalar counting result rows
+    the ``out_capacity`` budget truncated (0 = exact). The cost model
+    sizes out_capacity from cardinality estimates; this counter is what
+    makes an underestimate loud (it feeds the distributed overflow-retry
+    path) instead of a silently short result.
     """
     on = [on] if isinstance(on, str) else list(on)
     assert how in ("inner", "left", "right", "full"), how
@@ -337,6 +344,11 @@ def join(
         slot_valid,
     )
     segments = [primary]
+    # rows the result WOULD hold with unbounded capacity: the true match
+    # count (`total` is computed before slot enumeration; under the hash
+    # algorithm it includes collision candidates — a conservative over-
+    # count) plus any unmatched-side rows accumulated below
+    want_rows = total.astype(jnp.int32)
 
     if how in ("left", "full"):
         # true-match count per (sorted) left row; rows with none emit unmatched
@@ -344,6 +356,7 @@ def join(
             slot_valid.astype(jnp.int32), mode="drop"
         )
         l_unmatched = l_valid & (true_cnt == 0)
+        want_rows = want_rows + jnp.sum(l_unmatched.astype(jnp.int32))
         seg = compact(
             out_table(jnp.where(l_unmatched, lperm, -1),
                       jnp.full((c_l,), -1, jnp.int32), c_l),
@@ -357,6 +370,7 @@ def join(
         ].add(1, mode="drop")
         r_valid = jnp.arange(c_r) < n_r
         r_unmatched = r_valid & (matched_r == 0)
+        want_rows = want_rows + jnp.sum(r_unmatched.astype(jnp.int32))
         seg = compact(
             out_table(jnp.full((c_r,), -1, jnp.int32),
                       jnp.where(r_unmatched, rperm, -1), c_r),
@@ -373,4 +387,7 @@ def join(
             {k: v[:out_capacity] for k, v in result.columns.items()},
             jnp.minimum(result.row_count, out_capacity),
         )
+    if with_overflow:
+        overflow = jnp.maximum(want_rows - out_capacity, 0).astype(jnp.int32)
+        return result, overflow
     return result

@@ -30,9 +30,27 @@ Optimizer passes (applied in order by :func:`optimize`):
    same way — a join additionally range-ALIGNS its other side to the
    sorted side's boundaries (one AllToAll instead of two). A single-shard
    mesh elides every shuffle (hash to one partition is the identity).
+5. **Cost model** (``repro.core.stats``) — per-operator cardinality
+   estimators propagate :class:`~repro.core.stats.TableStats` (row
+   counts, per-key NDV sketches) from analyzed inputs through the plan;
+   the cost pass then (a) resolves each GroupBy's ``strategy="auto"`` to
+   ``shuffle`` vs ``two_phase`` by comparing estimated shuffle rows
+   (``rows`` vs ``num_shards * key NDV`` — the arXiv:2010.14596
+   crossover), (b) right-sizes every unset ``bucket_capacity`` /
+   ``out_capacity`` from estimated occupancy instead of the fixed
+   ``FALLBACK_SLACK`` multiple of table capacity, and (c) marks those
+   nodes ``sized`` so the runtime knows an overflow means *estimate was
+   wrong* and triggers one recompile-with-conservative-capacity retry
+   (``DistContext._run_plan``) rather than wrong results. Without input
+   statistics the pass only resolves ``auto`` strategies (to the
+   documented ``two_phase`` fallback) and the executor's
+   ``FALLBACK_SLACK`` sizing applies — byte-compatible with the
+   pre-cost-model behavior.
 
 ``Limit`` is a true global head-n (a counts prefix-scan inside the fused
-body assigns each shard its take quota), not a per-shard truncation.
+body assigns each shard its take quota), not a per-shard truncation; the
+optimizer pushes it below order-preserving ``Project`` so truncation
+happens before wide-row work.
 
 The canonicalized plan (:func:`canonical_key`) is the jit-cache key, so a
 pipeline re-collected every training step compiles exactly once.
@@ -48,6 +66,7 @@ import jax.numpy as jnp
 
 from repro.core import ops_dist as D
 from repro.core import ops_local as L
+from repro.core import stats as S
 from repro.core.repartition import (Partitioning, RangePartitioning,
                                     default_bucket_capacity,
                                     range_prefix_matches)
@@ -114,6 +133,7 @@ class Repartition(Node):
     seed: int = 7
     bucket_capacity: int | None = None
     skip_shuffle: bool = False
+    sized: bool = False  # bucket filled in by the cost model (estimate!)
 
 
 @dataclass(frozen=True)
@@ -134,6 +154,10 @@ class Join(Node):
     # range-ALIGNED to its boundaries instead of hash-shuffled.
     align: str | None = None          # None | "left" | "right"
     align_keys: tuple[str, ...] | None = None
+    sized: bool = False      # bucket filled by the cost model (estimate!)
+    out_sized: bool = False  # out_capacity filled by the cost model —
+    # tracked separately so a USER-set out_capacity (deliberate
+    # truncation, surfaced in stats) is never treated as a bad estimate
 
 
 @dataclass(frozen=True)
@@ -141,13 +165,18 @@ class GroupBy(Node):
     child: Node
     keys: tuple[str, ...]
     pairs: tuple[tuple[str, str], ...]  # normalized (col, op) aggregations
-    strategy: str = "two_phase"
+    # "auto" defers the shuffle-vs-two-phase choice to the cost model
+    # (arXiv:2010.14596: the winner flips with key cardinality); resolved
+    # to a concrete strategy by the cost pass before execution —
+    # "two_phase" when no statistics are available.
+    strategy: str = "auto"
     bucket_capacity: int | None = None
     partial_capacity: int | None = None
     out_capacity: int | None = None
     seed: int = 7
     shuffle_seed: int | None = None
     skip_shuffle: bool = False
+    sized: bool = False  # bucket filled in by the cost model (estimate!)
 
 
 @dataclass(frozen=True)
@@ -157,6 +186,7 @@ class Sort(Node):
     bucket_capacity: int | None = None
     samples_per_shard: int = 64
     skip_shuffle: bool = False
+    sized: bool = False  # bucket filled in by the cost model (estimate!)
 
 
 @dataclass(frozen=True)
@@ -170,6 +200,7 @@ class SetOp(Node):
     mode: str = "symmetric"  # Difference only
     skip_left_shuffle: bool = False
     skip_right_shuffle: bool = False
+    sized: bool = False  # bucket filled in by the cost model (estimate!)
 
 
 @dataclass(frozen=True)
@@ -193,6 +224,7 @@ class Distinct(Node):
     bucket_capacity: int | None = None
     seed: int = 7
     skip_shuffle: bool = False
+    sized: bool = False  # bucket filled in by the cost model (estimate!)
 
 
 def children(node: Node) -> tuple[Node, ...]:
@@ -354,6 +386,26 @@ def _pushdown_selects(node: Node, an: _Analysis) -> Node:
                                                                  "right"):
             return replace(ch, right=_pushdown_selects(
                 replace(node, child=ch.right), an))
+    return node
+
+
+# ---------------------------------------------------------------------------
+# optimizer pass 2b: limit pushdown (truncate before wide-row work)
+# ---------------------------------------------------------------------------
+
+
+def _pushdown_limits(node: Node) -> Node:
+    """``Limit(Project(x)) -> Project(Limit(x))``: Project preserves row
+    order and count, so the global head-n commutes with it — the take
+    quota is computed (and rows dropped) before any wide-row work above.
+    Project is the ONLY order-preserving rewrite target: Select changes
+    row membership, Sort/Repartition change placement/order."""
+    kids = [_pushdown_limits(c) for c in children(node)]
+    node = _with_children(node, kids)
+    if isinstance(node, Limit) and isinstance(node.child, Project):
+        proj = node.child
+        return replace(proj, child=_pushdown_limits(
+            replace(node, child=proj.child)))
     return node
 
 
@@ -578,23 +630,299 @@ def _elide(node: Node, p: int, an: _Analysis
     raise TypeError(node)
 
 
+# ---------------------------------------------------------------------------
+# optimizer pass 5: the cost model — cardinality estimation + sizing
+# ---------------------------------------------------------------------------
+
+
+class _Estimator:
+    """Memoized per-node :class:`~repro.core.stats.TableStats` estimate.
+
+    None = unknown (an input without statistics poisons everything above
+    it — the conservative fixed-slack path then applies). Estimates are
+    classic System-R style: default selectivity for predicates, NDV-capped
+    output rows for GroupBy/Distinct, containment for joins.
+    """
+
+    def __init__(self, an: _Analysis, input_stats: Sequence):
+        self.an = an
+        self.inputs = list(input_stats)
+        self._memo: dict[int, tuple[Node, object]] = {}
+
+    def stats(self, node: Node) -> S.TableStats | None:
+        hit = self._memo.get(id(node))
+        if hit is not None and hit[0] is node:
+            return hit[1]
+        out = self._stats(node)
+        self._memo[id(node)] = (node, out)
+        return out
+
+    def _stats(self, node: Node) -> S.TableStats | None:
+        if isinstance(node, Scan):
+            if node.slot >= len(self.inputs):
+                return None
+            return self.inputs[node.slot]
+        kids = [self.stats(c) for c in children(node)]
+        if isinstance(node, Select):
+            cs = kids[0]
+            return None if cs is None else S.cap_rows(
+                cs, cs.rows * S.DEFAULT_SELECTIVITY)
+        if isinstance(node, Project):
+            cs = kids[0]
+            return None if cs is None else S.cap_rows(cs, cs.rows,
+                                                      keep=node.columns)
+        if isinstance(node, Limit):
+            cs = kids[0]
+            return None if cs is None else S.cap_rows(
+                cs, min(float(node.n), cs.rows))
+        if isinstance(node, (Sort, Repartition)):
+            # row- and key-preserving; only the shard placement changes
+            cs = kids[0]
+            return None if cs is None else S.cap_rows(cs, cs.rows)
+        if isinstance(node, GroupBy):
+            cs = kids[0]
+            if cs is None:
+                return None
+            ndv = cs.ndv(node.keys)
+            rows = cs.rows if ndv is None else min(ndv, cs.rows)
+            return S.cap_rows(cs, rows, keep=node.keys)
+        if isinstance(node, Join):
+            sl, sr = kids
+            if sl is None or sr is None:
+                return None
+            # containment: every value of the smaller key domain joins
+            # into the larger -> |L><R| = |L|*|R| / max(ndv_l, ndv_r)
+            dl = sl.ndv(node.on)
+            dr = sr.ndv(node.on)
+            dl = sl.rows if dl is None else dl
+            dr = sr.rows if dr is None else dr
+            m = sl.rows * sr.rows / max(dl, dr, 1.0)
+            rows = {"inner": m, "left": m + sl.rows, "right": m + sr.rows,
+                    "full": m + sl.rows + sr.rows}[node.how]
+            lsch = self.an.schema(node.left)
+            cols = dict(sl.columns)
+            for k, c in sr.columns:
+                cols[k + JOIN_SUFFIX if k in lsch else k] = c
+            for k in node.on:  # equi-key: the smaller NDV survives
+                a, b = sl.col(k), sr.col(k)
+                if a is not None and b is not None:
+                    cols[k] = S.ColumnStats(min(a.ndv, b.ndv), a.lo, a.hi)
+            return S.cap_rows(
+                S.TableStats(rows=rows, columns=tuple(sorted(cols.items()))),
+                rows)
+        if isinstance(node, (Union, Intersect, Difference)):
+            sl, sr = kids
+            if sl is None or sr is None:
+                return None
+            if isinstance(node, Intersect):
+                rows = min(sl.rows, sr.rows)
+            elif isinstance(node, Difference) and node.mode == "left":
+                rows = sl.rows
+            else:  # union / symmetric difference upper bound
+                rows = sl.rows + sr.rows
+            return S.cap_rows(sl, rows)
+        if isinstance(node, Distinct):
+            cs = kids[0]
+            if cs is None:
+                return None
+            ndv = cs.ndv(tuple(self.an.schema(node.child)))
+            rows = cs.rows if ndv is None else min(ndv, cs.rows)
+            return S.cap_rows(cs, rows)
+        raise TypeError(node)
+
+
+def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
+    """Fill unset capacities / resolve ``auto`` strategies from estimates.
+
+    Every capacity this pass writes is marked ``sized=True`` on its node:
+    the runtime treats overflow on a sized plan as "the estimate was
+    wrong" and retries once with conservative capacities
+    (``execute_plan(..., safe_capacity=True)``). A single-shard mesh
+    skips sizing entirely — there is no wire to save and the fallback
+    capacities are already local-only.
+    """
+    kids = [_apply_costs(c, est, p) for c in children(node)]
+    if isinstance(node, GroupBy):
+        cs = est.stats(node.child)  # memo holds the pre-costing child
+        strategy, bucket, sized = node.strategy, node.bucket_capacity, \
+            node.sized
+        # None = key cardinality unknown (no stats, or the key column was
+        # never sketched — e.g. a derived aggregate column)
+        ndv = cs.ndv(node.keys) if cs is not None else None
+        if strategy == "auto":
+            # two-phase ships <= min(ndv, rows/p) partial rows per shard
+            # (p * ndv total); raw shuffle ships every row — pick the
+            # smaller wire volume. Missing information (no stats, or the
+            # key column was never sketched) takes the documented
+            # two_phase fallback, never worst-case shuffle.
+            strategy = "two_phase" if ndv is None or p * ndv <= cs.rows \
+                else "shuffle"
+        if (bucket is None and cs is not None and p > 1
+                and not node.skip_shuffle):
+            src = cs.shard_rows(p)
+            if strategy == "two_phase" and ndv is not None:
+                src = min(src, ndv)
+            bucket = S.size_bucket(src, p)
+            sized = True
+        return replace(node, child=kids[0], strategy=strategy,
+                       bucket_capacity=bucket, sized=sized)
+    if isinstance(node, Repartition):
+        cs = est.stats(node.child)
+        bucket, sized = node.bucket_capacity, node.sized
+        if (bucket is None and cs is not None and p > 1
+                and not node.skip_shuffle):
+            bucket = S.size_bucket(cs.shard_rows(p), p)
+            sized = True
+        return replace(node, child=kids[0], bucket_capacity=bucket,
+                       sized=sized)
+    if isinstance(node, Sort):
+        cs = est.stats(node.child)
+        bucket, sized = node.bucket_capacity, node.sized
+        if (bucket is None and cs is not None and p > 1
+                and not node.skip_shuffle):
+            # sampled splitters miss true quantiles: widen the mean
+            bucket = S.size_bucket(cs.shard_rows(p), p,
+                                   factor=S.RANGE_SIZING_FACTOR)
+            sized = True
+        return replace(node, child=kids[0], bucket_capacity=bucket,
+                       sized=sized)
+    if isinstance(node, Join):
+        sl, sr = est.stats(node.left), est.stats(node.right)
+        js = est.stats(node)
+        bucket, out = node.bucket_capacity, node.out_capacity
+        sized, out_sized = node.sized, node.out_sized
+        if p > 1 and sl is not None and sr is not None:
+            # a range-ALIGNED join keeps its runtime capacity-bump bucket
+            # (a whole source shard may target one anchor range — the
+            # unoverflowable bound beats any estimate there)
+            both_skipped = node.skip_left_shuffle and node.skip_right_shuffle
+            if bucket is None and node.align is None and not both_skipped:
+                src = max(
+                    0.0 if node.skip_left_shuffle else sl.shard_rows(p),
+                    0.0 if node.skip_right_shuffle else sr.shard_rows(p))
+                bucket = S.size_bucket(src, p)
+                sized = True
+            if out is None and js is not None:
+                # sized by estimated match count, not c_l + c_r — the
+                # join truncation counter makes an underestimate loud
+                out = S.size_output(js.rows, p,
+                                    factor=S.JOIN_OUT_SIZING_FACTOR)
+                out_sized = True
+        return replace(node, left=kids[0], right=kids[1],
+                       bucket_capacity=bucket, out_capacity=out,
+                       sized=sized, out_sized=out_sized)
+    if isinstance(node, SetOp):
+        sl, sr = est.stats(node.left), est.stats(node.right)
+        bucket, sized = node.bucket_capacity, node.sized
+        both_skipped = node.skip_left_shuffle and node.skip_right_shuffle
+        if (bucket is None and p > 1 and sl is not None and sr is not None
+                and not both_skipped):
+            src = max(0.0 if node.skip_left_shuffle else sl.shard_rows(p),
+                      0.0 if node.skip_right_shuffle else sr.shard_rows(p))
+            bucket = S.size_bucket(src, p)
+            sized = True
+        return replace(node, left=kids[0], right=kids[1],
+                       bucket_capacity=bucket, sized=sized)
+    if isinstance(node, Distinct):
+        cs = est.stats(node.child)
+        bucket, sized = node.bucket_capacity, node.sized
+        if (bucket is None and cs is not None and p > 1
+                and not node.skip_shuffle):
+            bucket = S.size_bucket(cs.shard_rows(p), p)
+            sized = True
+        return replace(node, child=kids[0], bucket_capacity=bucket,
+                       sized=sized)
+    return _with_children(node, kids)
+
+
+def apply_cost_model(plan: Node, input_schemas: Sequence[dict],
+                     num_shards: int, input_stats: Sequence | None = None
+                     ) -> Node:
+    """The cost pass alone (strategy resolution + capacity sizing) — the
+    eager one-node-plan path runs this without the logical rewrites so
+    ``ctx.groupby(analyzed_table, ...)`` right-sizes like a fused plan."""
+    an = _Analysis(input_schemas)
+    est = _Estimator(an, input_stats if input_stats is not None
+                     else [None] * len(input_schemas))
+    return _apply_costs(plan, est, num_shards)
+
+
+def estimate_output_stats(plan: Node, input_schemas: Sequence[dict],
+                          input_stats: Sequence | None
+                          ) -> S.TableStats | None:
+    """The estimator's TableStats for the plan's result (None = unknown).
+    Attached to materialized DistTables so chained pipelines keep cost-
+    model coverage without re-analyzing intermediates."""
+    if input_stats is None or not any(s is not None for s in input_stats):
+        return None
+    an = _Analysis(input_schemas)
+    return _Estimator(an, input_stats).stats(plan)
+
+
+def _node_cost_sized(node: Node) -> bool:
+    return getattr(node, "sized", False) or getattr(node, "out_sized", False)
+
+
+def plan_cost_sized(plan: Node) -> bool:
+    """True when any capacity in the plan came from a cardinality
+    ESTIMATE — the signal that runtime overflow warrants the safe retry."""
+    if _node_cost_sized(plan):
+        return True
+    return any(plan_cost_sized(c) for c in children(plan))
+
+
+def _stats_arity(node: Node) -> int:
+    """How many ShuffleStats entries ``execute_plan`` emits for ``node``."""
+    if isinstance(node, (Join, SetOp)):
+        return 2
+    if isinstance(node, (Limit, Repartition, GroupBy, Sort, Distinct)):
+        return 1
+    return 0
+
+
+def cost_sized_stats_mask(plan: Node) -> list[bool]:
+    """Per-ShuffleStats flag: did THIS entry's capacities come from cost-
+    model estimates? Mirrors ``execute_plan``'s depth-first post-order
+    stats emission exactly (children left-to-right, then the node's own
+    entries), so the overflow-retry gate can ignore overflow on USER-set
+    capacities — those keep the pre-cost-model surface-in-stats contract.
+    """
+    mask: list[bool] = []
+
+    def walk(node: Node):
+        for c in children(node):
+            walk(c)
+        mask.extend([_node_cost_sized(node)] * _stats_arity(node))
+
+    walk(plan)
+    return mask
+
+
 def optimize_with_partitioning(
-        plan: Node, input_schemas: Sequence[dict], num_shards: int
+        plan: Node, input_schemas: Sequence[dict], num_shards: int,
+        input_stats: Sequence | None = None,
 ) -> tuple[Node, Partitioning | RangePartitioning | None]:
-    """All passes: probe -> predicate pushdown -> projection pushdown ->
-    shuffle elision. Pure plan-to-plan; safe to golden-test offline.
-    Also returns the result's static placement (one elision walk serves
-    both the rewrite and the output DistTable tag)."""
+    """All passes: probe -> predicate pushdown -> limit pushdown ->
+    projection pushdown -> shuffle elision -> cost model. Pure
+    plan-to-plan; safe to golden-test offline. Also returns the result's
+    static placement (one elision walk serves both the rewrite and the
+    output DistTable tag)."""
     an = _Analysis(input_schemas)
     plan = _annotate_selects(plan, an)
     plan = _pushdown_selects(plan, an)
+    plan = _pushdown_limits(plan)
     plan = _pushdown_projections(plan, None, an)
-    return _elide(plan, num_shards, an)
+    plan, part = _elide(plan, num_shards, an)
+    est = _Estimator(an, input_stats if input_stats is not None
+                     else [None] * len(input_schemas))
+    plan = _apply_costs(plan, est, num_shards)
+    return plan, part
 
 
-def optimize(plan: Node, input_schemas: Sequence[dict], num_shards: int
-             ) -> Node:
-    return optimize_with_partitioning(plan, input_schemas, num_shards)[0]
+def optimize(plan: Node, input_schemas: Sequence[dict], num_shards: int,
+             input_stats: Sequence | None = None) -> Node:
+    return optimize_with_partitioning(plan, input_schemas, num_shards,
+                                      input_stats)[0]
 
 
 def output_partitioning(plan: Node, input_schemas: Sequence[dict],
@@ -659,21 +987,33 @@ def _canon(node: Node):
 
 
 def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
-                 num_shards: int, report: list | None = None
-                 ) -> tuple[Table, tuple]:
+                 num_shards: int, report: list | None = None,
+                 safe_capacity: bool = False) -> tuple[Table, tuple]:
     """Evaluate the plan over per-shard local Tables.
 
     Returns ``(output table, stats)`` where ``stats`` is one ShuffleStats
     per *potential* shuffle in depth-first plan order (zeros when elided),
     keeping the stats pytree stable whether or not the optimizer fired.
+
+    ``safe_capacity`` is the overflow-retry mode: every capacity the plan
+    left unset is taken at the UNOVERFLOWABLE bound (a send bucket the
+    size of the whole source table — no hash spread can exceed it)
+    instead of the ``FALLBACK_SLACK`` heuristic. ``DistContext._run_plan``
+    re-runs a cost-sized plan this way (with its estimate-derived
+    capacities stripped) after the overflow counter proves an estimate
+    wrong; capacities the USER set explicitly are honored as-is in both
+    modes (their overflow surfaces in stats, the pre-existing contract).
     """
     p = num_shards
     stats: list = []
     memo: dict[int, Table] = {}
 
-    def cap(t: Table, bucket: int | None, slack: float = 2.0) -> int:
+    def cap(t: Table, bucket: int | None,
+            slack: float = S.FALLBACK_SLACK) -> int:
         if bucket is not None:
             return bucket
+        if safe_capacity:
+            return t.capacity
         return default_bucket_capacity(t.capacity, p, slack)
 
     def run(node: Node) -> Table:
@@ -724,7 +1064,7 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
             # to the eager chain
             out_capacity = node.out_capacity
             if out_capacity is None:
-                out_capacity = 2 * p * cb
+                out_capacity = int(S.JOIN_OUT_FACTOR * p * cb)
             out, st = D.dist_join(
                 lt, rt, list(node.on), axis_name=axis_name,
                 bucket_capacity=cb, how=node.how, algorithm=node.algorithm,
@@ -732,15 +1072,21 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                 shuffle_seed=node.shuffle_seed,
                 skip_left_shuffle=node.skip_left_shuffle,
                 skip_right_shuffle=node.skip_right_shuffle,
-                align=node.align, align_keys=node.align_keys, report=report)
+                align=node.align, align_keys=node.align_keys,
+                count_truncation=node.out_sized,
+                report=report)
             stats.extend(st)
             return out
         if isinstance(node, GroupBy):
             t = run(node.child)
+            # "auto" is resolved by the cost pass; a plan executed without
+            # it (direct execute_plan callers) gets the documented fallback
+            strategy = "two_phase" if node.strategy == "auto" \
+                else node.strategy
             out, st = D.dist_groupby(
                 t, list(node.keys), node.pairs, axis_name=axis_name,
                 bucket_capacity=cap(t, node.bucket_capacity),
-                strategy=node.strategy,
+                strategy=strategy,
                 partial_capacity=node.partial_capacity,
                 out_capacity=node.out_capacity, seed=node.seed,
                 shuffle_seed=node.shuffle_seed,
@@ -751,7 +1097,12 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
             t = run(node.child)
             out, st = D.dist_sort(
                 t, list(node.by), axis_name=axis_name,
-                bucket_capacity=cap(t, node.bucket_capacity, slack=4.0),
+                # range partition by sampled splitters misses true
+                # quantiles: the no-stats bucket widens the one fallback
+                # constant by the documented sort factor (== the old 4.0)
+                bucket_capacity=cap(t, node.bucket_capacity,
+                                    slack=S.FALLBACK_SLACK
+                                    * S.SORT_SLACK_FACTOR),
                 samples_per_shard=node.samples_per_shard,
                 skip_shuffle=node.skip_shuffle, report=report)
             stats.extend(st)
@@ -794,10 +1145,38 @@ def _shuffle_word(skip: bool) -> str:
     return "elided" if skip else "alltoall"
 
 
-def explain(plan: Node) -> str:
+def explain(plan: Node, input_schemas: Sequence[dict] | None = None,
+            input_stats: Sequence | None = None) -> str:
     """Human-readable plan tree (golden-testable): one node per line, with
-    every potential shuffle marked ``alltoall`` or ``elided``."""
+    every potential shuffle marked ``alltoall`` or ``elided``.
+
+    With ``input_schemas`` + ``input_stats`` every node is additionally
+    annotated with its estimated output rows (``~rows=``), and nodes
+    whose capacities the cost model filled in show them (``bucket=``,
+    ``out=``, ``cost-sized``) — the audit trail for every physical-
+    planning decision. Without statistics the output is unchanged.
+    """
+    est = None
+    if input_schemas is not None and input_stats is not None \
+            and any(s is not None for s in input_stats):
+        est = _Estimator(_Analysis(input_schemas), input_stats)
     lines: list[str] = []
+
+    def notes(node: Node) -> str:
+        parts = []
+        bucket = getattr(node, "bucket_capacity", None)
+        if bucket is not None and not isinstance(node, (Select, Project,
+                                                        Limit, Scan)):
+            parts.append(f"bucket={bucket}")
+        if isinstance(node, Join) and node.out_capacity is not None:
+            parts.append(f"out={node.out_capacity}")
+        if _node_cost_sized(node):
+            parts.append("cost-sized")
+        if est is not None:
+            s = est.stats(node)
+            if s is not None:
+                parts.append(f"~rows={int(round(s.rows))}")
+        return (", " + ", ".join(parts)) if parts else ""
 
     def walk(node: Node, depth: int):
         pad = "  " * depth
@@ -809,47 +1188,42 @@ def explain(plan: Node) -> str:
             elif pt is not None:
                 part = (f", partitioned=hash{pt.keys}%"
                         f"{pt.num_partitions}@seed{pt.seed}")
-            lines.append(f"{pad}Scan(slot={node.slot}{part})")
+            txt = f"Scan(slot={node.slot}{part}"
         elif isinstance(node, Select):
-            lines.append(f"{pad}Select(key={node.key!r}, "
-                         f"columns={node.columns})")
+            txt = f"Select(key={node.key!r}, columns={node.columns}"
         elif isinstance(node, Project):
-            lines.append(f"{pad}Project(columns={node.columns})")
+            txt = f"Project(columns={node.columns}"
         elif isinstance(node, Limit):
-            lines.append(f"{pad}Limit(n={node.n})")
+            txt = f"Limit(n={node.n}"
         elif isinstance(node, Repartition):
-            lines.append(f"{pad}Repartition(keys={node.keys}, "
-                         f"seed={node.seed}, "
-                         f"shuffle={_shuffle_word(node.skip_shuffle)})")
+            txt = (f"Repartition(keys={node.keys}, seed={node.seed}, "
+                   f"shuffle={_shuffle_word(node.skip_shuffle)}")
         elif isinstance(node, Join):
             extra = ""
             if node.align is not None:
                 extra = f", align={node.align}{node.align_keys}"
-            lines.append(
-                f"{pad}Join(on={node.on}, how={node.how}, "
-                f"algorithm={node.algorithm}, "
-                f"left={_shuffle_word(node.skip_left_shuffle)}, "
-                f"right={_shuffle_word(node.skip_right_shuffle)}{extra})")
+            txt = (f"Join(on={node.on}, how={node.how}, "
+                   f"algorithm={node.algorithm}, "
+                   f"left={_shuffle_word(node.skip_left_shuffle)}, "
+                   f"right={_shuffle_word(node.skip_right_shuffle)}{extra}")
         elif isinstance(node, GroupBy):
-            lines.append(
-                f"{pad}GroupBy(keys={node.keys}, aggs={node.pairs}, "
-                f"strategy={node.strategy}, "
-                f"shuffle={_shuffle_word(node.skip_shuffle)})")
+            txt = (f"GroupBy(keys={node.keys}, aggs={node.pairs}, "
+                   f"strategy={node.strategy}, "
+                   f"shuffle={_shuffle_word(node.skip_shuffle)}")
         elif isinstance(node, Sort):
-            lines.append(f"{pad}Sort(by={node.by}, "
-                         f"shuffle={_shuffle_word(node.skip_shuffle)})")
+            txt = (f"Sort(by={node.by}, "
+                   f"shuffle={_shuffle_word(node.skip_shuffle)}")
         elif isinstance(node, SetOp):
             extra = f", mode={node.mode}" if isinstance(node, Difference) \
                 else ""
-            lines.append(
-                f"{pad}{type(node).__name__}("
-                f"left={_shuffle_word(node.skip_left_shuffle)}, "
-                f"right={_shuffle_word(node.skip_right_shuffle)}{extra})")
+            txt = (f"{type(node).__name__}("
+                   f"left={_shuffle_word(node.skip_left_shuffle)}, "
+                   f"right={_shuffle_word(node.skip_right_shuffle)}{extra}")
         elif isinstance(node, Distinct):
-            lines.append(f"{pad}Distinct("
-                         f"shuffle={_shuffle_word(node.skip_shuffle)})")
+            txt = f"Distinct(shuffle={_shuffle_word(node.skip_shuffle)}"
         else:
-            lines.append(f"{pad}{type(node).__name__}")
+            txt = f"{type(node).__name__}("
+        lines.append(f"{pad}{txt}{notes(node)})")
         for c in children(node):
             walk(c, depth + 1)
 

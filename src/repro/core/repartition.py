@@ -170,8 +170,18 @@ def repartition(
     return out, stats
 
 
-def default_bucket_capacity(capacity: int, num_shards: int, slack: float = 2.0) -> int:
-    """Per-destination slot budget: even split x slack for skew."""
+def default_bucket_capacity(capacity: int, num_shards: int,
+                            slack: float | None = None) -> int:
+    """Per-destination slot budget: even split x slack for skew.
+
+    ``slack=None`` uses :data:`repro.core.stats.FALLBACK_SLACK` — the one
+    documented no-statistics constant. The plan optimizer replaces this
+    sizing entirely when table statistics are available (see
+    ``repro.core.stats`` and the cost pass in ``repro.core.plan``).
+    """
+    from repro.core.stats import FALLBACK_SLACK
     from repro.utils import ceil_div
 
+    if slack is None:
+        slack = FALLBACK_SLACK
     return max(1, ceil_div(int(capacity * slack), num_shards))

@@ -96,6 +96,14 @@ class Table:
         return sorted(self.columns)
 
     @property
+    def key_column_names(self) -> list[str]:
+        """Columns usable as sort/hash/statistics keys: 1-D, key-typed.
+        (N-D payload columns ride along but never drive placement or the
+        cost model's cardinality sketches.)"""
+        return [k for k, v in sorted(self.columns.items())
+                if v.ndim == 1 and v.dtype in KEY_DTYPES]
+
+    @property
     def schema(self) -> dict[str, jnp.dtype]:
         return {k: v.dtype for k, v in sorted(self.columns.items())}
 

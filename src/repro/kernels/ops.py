@@ -16,7 +16,7 @@ from repro.kernels.bitonic import DEFAULT_TILE, bitonic_sort_tiles
 from repro.kernels.hash64 import hash32
 from repro.kernels.histogram import bucket_histogram
 from repro.kernels.segment_reduce import MAX_SEGMENTS, segment_reduce_tiles
-from repro.utils import next_pow2
+from repro.utils import interpret_mode, next_pow2
 
 __all__ = [
     "hash32",
@@ -64,28 +64,29 @@ def segment_reduce(
     int32, entries outside [0, num_segments) (padding uses -1) are ignored.
     Empty segments hold the op identity (ref.seg_init).
 
-    The Pallas one-hot kernel handles the hot shape (1-D values, segment
-    count within one VMEM tile budget); N-D payloads and large segment
-    counts fall back to XLA scatter-reduce — bit-identical semantics.
+    The Pallas one-hot kernel handles 1-D f32/i32 values at ANY segment
+    count — counts past MAX_SEGMENTS tile the segment axis in a second
+    grid dimension (kernels/segment_reduce.py). N-D payloads fall back to
+    XLA scatter-reduce; ``use_kernel=False`` forces that path (the
+    bit-identical oracle the tests sweep against).
+
+    Auto (``use_kernel=None``) prefers the kernel wherever it actually
+    runs AS a kernel; under interpret mode (no TPU — tests, CPU CI) the
+    emulated multi-tile one-hot is far slower than XLA scatter, so auto
+    only takes the kernel path for single-tile segment counts there.
     """
     assert op in ("sum", "min", "max"), op
     assert seg_ids.ndim == 1 and values.shape[0] == seg_ids.shape[0], (
         values.shape, seg_ids.shape)
     shape_ok = values.ndim == 1 and values.dtype in (jnp.float32, jnp.int32)
-    kernel_ok = shape_ok and num_segments <= MAX_SEGMENTS
     if use_kernel is None:
-        use_kernel = kernel_ok
+        use_kernel = shape_ok and (num_segments <= MAX_SEGMENTS
+                                   or not interpret_mode())
     elif use_kernel and not shape_ok:
         raise ValueError(
             f"segment_reduce kernel needs 1-D f32/i32 values; got "
             f"shape={values.shape} dtype={values.dtype}. Use "
             f"use_kernel=None for the XLA fallback.")
-    elif use_kernel and num_segments > MAX_SEGMENTS:
-        # an oversize segment count is a data-scale property, not a caller
-        # bug: route to the bit-identical XLA scatter path rather than
-        # failing (or worse, truncating) inside the Pallas kernel's VMEM
-        # budget
-        use_kernel = False
     if use_kernel:
         return segment_reduce_tiles(values, seg_ids, num_segments, op)
     init = ref.seg_init(op, values.dtype)

@@ -8,11 +8,16 @@ against the segment iota, reduced over the row axis. For f32 sums the
 one-hot contraction is a matmul, so the accumulation rides the MXU; min/max
 use a masked VPU reduction.
 
-Grid walks row-blocks; each step folds its block's per-segment partials into
-the single (1, G) output block (revisited across the grid — Pallas keeps it
-VMEM-resident, so HBM sees one read of the rows and one write of G results).
-Segment count is capped by MAX_SEGMENTS (the (rows_block, G) one-hot must
-fit in VMEM); larger G falls back to the XLA scatter path in kernels/ops.py.
+The grid is 2-D: ``(segment tiles, row blocks)``. Each step folds one row
+block's partials into the current (1, SEG_TILE)-wide slice of the output;
+the row axis is the *inner* grid dimension, so a given output tile stays
+VMEM-resident across all of its row steps (HBM sees the rows once per
+segment tile and one write per output tile). ``MAX_SEGMENTS`` is the
+per-tile width budget — the (rows_block, SEG_TILE) one-hot that must fit
+in VMEM — not a limit on the total segment count: larger ``num_segments``
+simply adds segment tiles, each comparing against its own offset window of
+the segment id space. The XLA scatter path (``kernels/ops.py``,
+``use_kernel=False``) remains the oracle/fallback for N-D payloads.
 """
 from __future__ import annotations
 
@@ -27,25 +32,29 @@ from repro.utils import interpret_mode, round_up
 
 LANES = 128
 BLOCK_ROWS = 8  # (8, 128) = 1024 rows per grid step; (1024, G) one-hot fits VMEM
+# per-tile segment width (VMEM budget for the one-hot), NOT a global cap:
+# num_segments beyond it tiles the segment axis in the second grid dim
 MAX_SEGMENTS = 1024
 
 OPS = ("sum", "min", "max")
 
 
-def _seg_kernel(seg_ref, val_ref, o_ref, *, op: str, num_segments: int):
-    step = pl.program_id(0)
+def _seg_kernel(seg_ref, val_ref, o_ref, *, op: str, seg_tile: int):
+    row_step = pl.program_id(1)  # inner dim: output tile stays resident
+    seg_base = pl.program_id(0) * seg_tile
     init = ref.seg_init(op, o_ref.dtype)
 
-    @pl.when(step == 0)
+    @pl.when(row_step == 0)
     def _init():
         o_ref[...] = jnp.full_like(o_ref, init)
 
     seg = seg_ref[...].reshape(-1)  # (BLOCK_ROWS*LANES,)
     val = val_ref[...].reshape(-1)
-    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, num_segments), 1)
-    onehot = seg[:, None] == buckets  # (rows, G); padding (-1) matches nothing
+    # this tile covers segment ids [seg_base, seg_base + seg_tile)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (1, seg_tile), 1) + seg_base
+    onehot = seg[:, None] == buckets  # (rows, tile); padding (-1) matches none
     if op == "sum" and val.dtype == jnp.float32:
-        # MXU path: (1, rows) @ (rows, G)
+        # MXU path: (1, rows) @ (rows, tile)
         o_ref[...] += jnp.dot(val[None, :], onehot.astype(jnp.float32),
                               preferred_element_type=jnp.float32)
     elif op == "sum":
@@ -79,38 +88,36 @@ def segment_reduce_tiles(
 
     seg_ids: (n,) int32; entries outside [0, num_segments) are ignored.
     Empty segments hold the op identity (0 / +inf-like / -inf-like).
-    Matches ref.segment_reduce_ref exactly.
+    Any segment count is supported: up to MAX_SEGMENTS runs as a single
+    output tile (one VMEM-resident block revisited across row steps);
+    beyond that the segment axis tiles into a second grid dimension.
+    Matches ref.segment_reduce_ref exactly either way.
     """
     assert op in OPS, op
     assert values.ndim == 1 and values.shape == seg_ids.shape, (
         values.shape, seg_ids.shape)
-    if num_segments > MAX_SEGMENTS:
-        # hard error (not an assert stripped by -O): the (rows, G) one-hot
-        # would exceed the kernel's VMEM tile budget — silently wrong or
-        # OOM. kernels/ops.py::segment_reduce routes oversize calls to the
-        # XLA scatter fallback before reaching here.
-        raise ValueError(
-            f"segment_reduce_tiles: num_segments={num_segments} exceeds "
-            f"MAX_SEGMENTS={MAX_SEGMENTS}; call kernels.ops.segment_reduce "
-            f"for the XLA fallback routing")
     if interpret is None:
         interpret = interpret_mode()
     (n,) = values.shape
     tile = BLOCK_ROWS * LANES
     n_pad = max(round_up(n, tile), tile)
-    g_pad = max(round_up(num_segments, LANES), LANES)
+    if num_segments <= MAX_SEGMENTS:
+        seg_tile = max(round_up(num_segments, LANES), LANES)
+    else:
+        seg_tile = MAX_SEGMENTS
+    g_pad = max(round_up(num_segments, seg_tile), seg_tile)
     segp = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(
         seg_ids.astype(jnp.int32)).reshape(n_pad // LANES, LANES)
     valp = jnp.zeros((n_pad,), values.dtype).at[:n].set(values) \
         .reshape(n_pad // LANES, LANES)
-    grid = (n_pad // tile,)
+    grid = (g_pad // seg_tile, n_pad // tile)  # (segment tiles, row blocks)
     out = pl.pallas_call(
-        functools.partial(_seg_kernel, op=op, num_segments=g_pad),
+        functools.partial(_seg_kernel, op=op, seg_tile=seg_tile),
         out_shape=jax.ShapeDtypeStruct((1, g_pad), values.dtype),
         grid=grid,
-        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
-                  pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, g_pad), lambda i: (0, 0)),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda s, i: (i, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, LANES), lambda s, i: (i, 0))],
+        out_specs=pl.BlockSpec((1, seg_tile), lambda s, i: (0, s)),
         interpret=interpret,
     )(segp, valp)
     return out.reshape(g_pad)[:num_segments]

@@ -323,6 +323,97 @@ def case_global_limit():
     return out
 
 
+def case_overflow_retry():
+    """The cost model's overflow-safe contract: a skewed repartition whose
+    stats-sized first-pass bucket overflows (every row shares one key, so
+    one destination absorbs everything the Poisson sizing spread over p)
+    must recompile ONCE at conservative capacities and still match the
+    local oracle bit-for-bit — never return the truncated result."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    n_per = 400
+    parts = [Table.from_arrays({
+        "k": np.zeros(n_per, np.int32),  # ONE key: maximal placement skew
+        "d0": np.arange(i * n_per, (i + 1) * n_per).astype(np.float32)})
+        for i in range(p)]
+    dt = ctx.analyze(ctx.from_local_parts(parts))
+    assert dt.stats is not None and dt.stats.col("k").ndv <= 2.0
+
+    out, (st,) = ctx.partition_by(dt, "k")
+    got = out.to_table().to_numpy()
+    # oracle: all rows land on hash(0)'s shard, ordered by source shard
+    # then original row order == the input's global concatenation order
+    want_d0 = np.concatenate([np.asarray(t.columns["d0"]) for t in parts])
+    retries_first = ctx.overflow_retries
+    # a failed-estimate output must carry no propagated stats (downstream
+    # stages fall back to conservative sizing, no cascade)
+    stats_dropped = out.stats is None
+    # the same plan again: known-bad key goes STRAIGHT to the safe plan —
+    # one conservative execution, no doomed sized run, no new retry
+    out2, (st2,) = ctx.partition_by(dt, "k")
+    got2 = out2.to_table().to_numpy()
+    return {
+        "retries": retries_first,
+        "retries_after_repeat": ctx.overflow_retries,
+        "stats_dropped": stats_dropped,
+        "rows": int(out.global_rows()),
+        "rows_expect": p * n_per,
+        "final_overflow": int(np.asarray(st.overflow).sum()
+                              + np.asarray(st2.overflow).sum()),
+        "identical": bool(np.array_equal(got["d0"], want_d0)
+                          and np.array_equal(got["k"],
+                                             np.zeros(p * n_per, np.int32))
+                          and np.array_equal(got2["d0"], want_d0)),
+    }
+
+
+def case_cost_groupby():
+    """Cost-model strategy choice + capacity right-sizing on 8 shards:
+    the optimizer must pick two_phase at low key cardinality and raw
+    shuffle at high cardinality, ship strictly fewer dense wire bytes
+    than the fixed-slack no-stats baseline at BOTH ends, and stay
+    bit-identical to the eager result (integer-valued float payloads)."""
+    from repro.core import plan as PL
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    rows_per = 600
+    aggs = (("d0", "sum"), ("d0", "count"), ("d0", "min"))
+
+    def run(key_range):
+        parts = [Table.from_arrays({
+            "k": np.random.default_rng(500 + key_range + i)
+            .integers(0, key_range, rows_per).astype(np.int32),
+            "d0": np.random.default_rng(900 + i)
+            .integers(-40, 40, rows_per).astype(np.float32)},
+            capacity=2 * rows_per)  # half-full: stats know what slack can't
+            for i in range(p)]
+        raw = ctx.from_local_parts(parts)
+        analyzed = ctx.analyze(raw)
+        base = ctx.frame(raw).groupby("k", aggs)      # no stats: fallback
+        cost = ctx.frame(analyzed).groupby("k", aggs)  # stats: cost model
+        strategy = cost.optimized().strategy
+        base_wire = sum(r["wire_bytes"] for r in base.plan_report())
+        cost_wire = sum(r["wire_bytes"] for r in cost.plan_report())
+        eager, _ = ctx.groupby(raw, "k", aggs)
+        got, stats = cost.collect_with_stats()
+        from repro.testing.compare import tables_bitwise_equal
+        return {
+            "strategy": strategy,
+            "base_wire": base_wire, "cost_wire": cost_wire,
+            "identical": tables_bitwise_equal(eager, got),
+            "overflow": sum(int(np.asarray(s.overflow).sum())
+                            for s in stats),
+        }
+
+    out = {"low": run(32), "high": run(rows_per * p * 4),
+           "retries": ctx.overflow_retries}
+    return out
+
+
 def case_sort_multikey():
     """Multi-key distributed sort: global lexicographic order across shards,
     row multiset preserved."""

@@ -98,6 +98,33 @@ def test_global_limit_matches_local_oracle():
     assert r["limit_reported_zero"], r
 
 
+def test_overflow_retry_recompiles_once_and_matches_oracle():
+    """The cost model's safety contract: a skewed repartition whose
+    stats-sized capacity overflows recompiles exactly once at conservative
+    capacities and matches the local oracle bit-for-bit."""
+    r = run_case("overflow_retry")
+    assert r["retries"] == 1, r
+    assert r["retries_after_repeat"] == 1, r  # repeat: straight to safe
+    assert r["stats_dropped"], r  # bad estimates don't cascade downstream
+    assert r["final_overflow"] == 0, r
+    assert r["rows"] == r["rows_expect"], r
+    assert r["identical"], r
+
+
+def test_cost_model_groupby_strategy_and_wire():
+    """Cost-driven physical planning: two_phase at low key cardinality,
+    raw shuffle at high, strictly fewer dense wire bytes than the
+    fixed-slack baseline at both ends, bit-identical results, no retry."""
+    r = run_case("cost_groupby")
+    assert r["retries"] == 0, r
+    assert r["low"]["strategy"] == "two_phase", r
+    assert r["high"]["strategy"] == "shuffle", r
+    for end in ("low", "high"):
+        assert r[end]["identical"], (end, r)
+        assert r[end]["overflow"] == 0, (end, r)
+        assert r[end]["cost_wire"] < r[end]["base_wire"], (end, r)
+
+
 def test_dist_sort_multikey():
     r = run_case("sort_multikey")
     assert r["order_ok"] and r["multiset_ok"], r

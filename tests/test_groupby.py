@@ -83,10 +83,10 @@ def test_segment_reduce_empty_segments_hold_identity():
 
 
 @pytest.mark.parametrize("op", ["sum", "min", "max"])
-def test_segment_reduce_oversize_routes_to_fallback(op):
-    # num_segments beyond the Pallas kernel's VMEM budget must route to the
-    # bit-identical XLA scatter path — even when the kernel was requested —
-    # never fail (or truncate) inside the kernel
+def test_segment_reduce_oversize_runs_in_kernel(op):
+    # num_segments beyond one VMEM tile now tiles the segment axis in a
+    # second grid dimension — the kernel path must match the oracle AND
+    # the XLA scatter fallback (use_kernel=False) exactly
     n, g = 4000, kops.MAX_SEGMENTS + 300
     vals = jnp.asarray(RNG.integers(-40, 40, n), jnp.int32)
     seg = jnp.asarray(RNG.integers(-1, g, n), jnp.int32)
@@ -95,9 +95,9 @@ def test_segment_reduce_oversize_routes_to_fallback(op):
         got = np.asarray(kops.segment_reduce(vals, seg, g, op,
                                              use_kernel=use_kernel))
         np.testing.assert_array_equal(got, want)
-    # the raw kernel itself refuses loudly rather than truncating
-    with pytest.raises(ValueError, match="MAX_SEGMENTS"):
-        segment_reduce_tiles(vals, seg, g, op)
+    # and the raw tiled kernel agrees on its own
+    np.testing.assert_array_equal(
+        np.asarray(segment_reduce_tiles(vals, seg, g, op)), want)
 
 
 # --- local groupby vs oracle -------------------------------------------------
@@ -196,8 +196,8 @@ def test_groupby_kernel_on_large_table_via_out_capacity():
 
 
 def test_segment_reduce_forced_kernel_shape_mismatch_still_raises():
-    # oversize segment counts now route to the fallback (see the oversize
-    # test above); a shape/dtype the kernel can never take still errors
+    # oversize segment counts now run in the kernel via segment-axis
+    # tiling (see above); a shape/dtype the kernel can never take errors
     with pytest.raises(ValueError, match="1-D"):
         kops.segment_reduce(jnp.zeros((8, 2), jnp.float32),
                             jnp.zeros((8,), jnp.int32), 4, "sum",

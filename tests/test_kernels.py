@@ -62,6 +62,52 @@ def test_histogram_sweep(n, buckets):
     assert int(np.asarray(got).sum()) == int((np.asarray(ids) >= 0).sum())
 
 
+# --- segment reduce: segment-axis tiling across the one-tile boundary ----------
+
+
+@pytest.mark.parametrize("n,g", [
+    (3000, 1023),   # just under one tile (single output block, old path)
+    (3000, 1024),   # exactly one tile
+    (3000, 1025),   # first tiled case: 2 segment tiles
+    (9999, 2048),   # tile-aligned multi-tile
+    (5000, 3000),   # ragged final tile
+])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_segment_reduce_tiled_boundary_sweep(n, g, op, dtype):
+    from repro.kernels.segment_reduce import MAX_SEGMENTS, segment_reduce_tiles
+    assert MAX_SEGMENTS == 1024  # the sweep brackets this boundary
+    vals = jnp.asarray(RNG.integers(-40, 40, n), dtype)
+    seg = jnp.asarray(RNG.integers(-1, g, n), jnp.int32)  # -1 = padding
+    want = np.asarray(ref.segment_reduce_ref(vals, seg, g, op))
+    got = np.asarray(segment_reduce_tiles(vals, seg, g, op))
+    np.testing.assert_array_equal(got, want)
+    # the public wrapper routes oversize counts to the SAME kernel now;
+    # the XLA scatter path stays available as the use_kernel=False oracle
+    via_ops = np.asarray(kops.segment_reduce(vals, seg, g, op,
+                                             use_kernel=True))
+    fallback = np.asarray(kops.segment_reduce(vals, seg, g, op,
+                                              use_kernel=False))
+    np.testing.assert_array_equal(via_ops, want)
+    np.testing.assert_array_equal(fallback, want)
+
+
+def test_segment_reduce_tiled_values_land_in_correct_tile():
+    # one value per segment, segments chosen to straddle every tile edge:
+    # any offset error between tiles would misplace them
+    from repro.kernels.segment_reduce import MAX_SEGMENTS, segment_reduce_tiles
+    g = 3 * MAX_SEGMENTS
+    targets = np.asarray([0, MAX_SEGMENTS - 1, MAX_SEGMENTS,
+                          2 * MAX_SEGMENTS - 1, 2 * MAX_SEGMENTS, g - 1],
+                         np.int32)
+    vals = jnp.asarray(np.arange(1, len(targets) + 1), jnp.int32)
+    out = np.asarray(segment_reduce_tiles(vals, jnp.asarray(targets), g,
+                                          "sum"))
+    expect = np.zeros((g,), np.int32)
+    expect[targets] = np.arange(1, len(targets) + 1)
+    np.testing.assert_array_equal(out, expect)
+
+
 # --- bitonic sort ---------------------------------------------------------------
 
 

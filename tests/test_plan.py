@@ -475,6 +475,217 @@ def test_collect_caches_on_canonical_plan(ctx):
     assert len(ctx._cache) == n1
 
 
+# --- cost model: limit pushdown, strategy choice, capacity sizing -------------
+
+
+from repro.core import stats as S  # noqa: E402  (groups the cost tests)
+
+LO_STATS = S.TableStats(rows=8000.0, columns=(("k", S.ColumnStats(32.0)),))
+HI_STATS = S.TableStats(rows=8000.0, columns=(("k", S.ColumnStats(7000.0)),))
+
+
+def test_limit_pushdown_below_project():
+    # Limit(Project(x)) -> Project(Limit(x)): truncate before wide-row work
+    opt = PL.optimize(PL.Limit(PL.Project(PL.Scan(0), ("k", "d0")), 5),
+                      [ORDERS], 8)
+    assert isinstance(opt, PL.Project) and isinstance(opt.child, PL.Limit)
+    assert opt.child.n == 5
+    # chains of projects: the limit sinks below every one of them
+    opt = PL.optimize(
+        PL.Limit(PL.Project(PL.Project(PL.Scan(0), ("k", "d0")), ("k",)), 3),
+        [ORDERS], 8)
+    assert isinstance(opt, PL.Project)
+    limits = find(opt, PL.Limit)
+    assert limits and isinstance(limits[0].child, PL.Scan), PL.explain(opt)
+
+
+def test_limit_not_pushed_below_select_or_sort():
+    # Select changes row membership, Sort changes order: both pin Limit
+    opt = PL.optimize(PL.Limit(PL.Select(PL.Scan(0),
+                                         lambda c: c["d0"] > 0, key="p"), 5),
+                      [ORDERS], 8)
+    assert isinstance(opt, PL.Limit) and isinstance(opt.child, PL.Select)
+    opt = PL.optimize(PL.Limit(PL.Sort(PL.Scan(0), ("k",)), 5), [ORDERS], 8)
+    assert isinstance(opt, PL.Limit) and isinstance(opt.child, PL.Sort)
+
+
+def test_groupby_auto_strategy_resolution():
+    plan = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),))
+    # no stats: the documented two_phase fallback, nothing sized
+    o = PL.optimize(plan, [ORDERS], 8)
+    assert o.strategy == "two_phase" and not o.sized
+    assert o.bucket_capacity is None
+    # low key NDV: p * ndv << rows -> two_phase, bucket sized from NDV
+    o = PL.optimize(plan, [ORDERS], 8, [LO_STATS])
+    assert o.strategy == "two_phase" and o.sized
+    assert o.bucket_capacity == S.size_bucket(32.0, 8)
+    # high key NDV: partials don't dedup -> raw shuffle, bucket from rows
+    o = PL.optimize(plan, [ORDERS], 8, [HI_STATS])
+    assert o.strategy == "shuffle" and o.sized
+    assert o.bucket_capacity == S.size_bucket(8000.0 / 8, 8)
+    # an explicit strategy is never overridden
+    o = PL.optimize(PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),),
+                               strategy="shuffle"), [ORDERS], 8, [LO_STATS])
+    assert o.strategy == "shuffle"
+    # stats present but the KEY column was never sketched (e.g. a derived
+    # aggregate column): missing information takes the two_phase
+    # fallback, never worst-case shuffle
+    no_key = S.TableStats(rows=8000.0, columns=(
+        ("d0", S.ColumnStats(100.0)),))
+    o = PL.optimize(plan, [ORDERS], 8, [no_key])
+    assert o.strategy == "two_phase"
+    assert o.bucket_capacity == S.size_bucket(8000.0 / 8, 8)  # rows-based
+
+
+def test_cost_sizing_fills_unset_capacities_only():
+    plan = PL.Join(PL.Scan(0), PL.Scan(1), ("k",))
+    o = PL.optimize(plan, [ORDERS, USERS], 8, [HI_STATS, HI_STATS])
+    assert o.sized and o.bucket_capacity is not None
+    assert o.out_capacity is not None  # estimated match count, not c_l+c_r
+    assert o.out_sized
+    assert PL.plan_cost_sized(o)
+    # a user-set bucket survives; the join is still out-sized
+    plan_u = PL.Join(PL.Scan(0), PL.Scan(1), ("k",), bucket_capacity=999)
+    o = PL.optimize(plan_u, [ORDERS, USERS], 8, [HI_STATS, HI_STATS])
+    assert o.bucket_capacity == 999
+    assert not o.sized and o.out_sized
+    # a USER-set out_capacity is deliberate truncation, never an estimate:
+    # out_sized must stay False (no truncation counting, no retry)
+    plan_o = PL.Join(PL.Scan(0), PL.Scan(1), ("k",), out_capacity=50)
+    o = PL.optimize(plan_o, [ORDERS, USERS], 8, [HI_STATS, HI_STATS])
+    assert o.out_capacity == 50 and not o.out_sized
+    assert o.sized  # only the bucket came from the estimate
+    # no stats: nothing sized at all (the byte-compat guard)
+    o = PL.optimize(plan, [ORDERS, USERS], 8)
+    assert o.bucket_capacity is None and o.out_capacity is None
+    assert not PL.plan_cost_sized(o)
+
+
+def test_cost_sizing_skipped_on_single_shard():
+    # p == 1: no wire to save; capacities stay at the local defaults so a
+    # stats-tagged table executes byte-identically to an untagged one
+    plan = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),))
+    o = PL.optimize(plan, [ORDERS], 1, [LO_STATS])
+    assert o.strategy == "two_phase" and not o.sized
+    assert o.bucket_capacity is None
+    jp = PL.Join(PL.Scan(0), PL.Scan(1), ("k",))
+    oj = PL.optimize(jp, [ORDERS, USERS], 1, [HI_STATS, HI_STATS])
+    assert not PL.plan_cost_sized(oj)
+
+
+def test_cost_sizing_leaves_aligned_join_bucket_alone():
+    # a range-aligned join keeps the runtime capacity-bump bucket (a whole
+    # source shard may pile into one anchor range); only out is sized
+    plan = PL.Join(PL.Sort(PL.Scan(0), ("k",)), PL.Scan(1), ("k",))
+    o = PL.optimize(plan, [ORDERS, USERS], 8, [HI_STATS, HI_STATS])
+    assert o.align == "left"
+    assert o.bucket_capacity is None and not o.sized
+    assert o.out_capacity is not None and o.out_sized
+
+
+def test_estimator_propagates_through_operators():
+    est = PL.estimate_output_stats(
+        PL.Select(PL.Scan(0), lambda c: c["d0"] > 0, key="p"),
+        [ORDERS], [LO_STATS])
+    assert est.rows == 8000.0 * S.DEFAULT_SELECTIVITY
+    est = PL.estimate_output_stats(
+        PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),)),
+        [ORDERS], [LO_STATS])
+    assert est.rows == 32.0  # NDV-capped
+    est = PL.estimate_output_stats(PL.Limit(PL.Scan(0), 7),
+                                   [ORDERS], [LO_STATS])
+    assert est.rows == 7.0
+    # containment join: rows_l * rows_r / max(ndv_l, ndv_r)
+    est = PL.estimate_output_stats(
+        PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+        [ORDERS, USERS], [LO_STATS, HI_STATS])
+    assert est.rows == pytest.approx(8000.0 * 8000.0 / 7000.0)
+    # an unknown input poisons the estimate (conservative path downstream)
+    assert PL.estimate_output_stats(
+        PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+        [ORDERS, USERS], [LO_STATS, None]) is None
+
+
+def test_explain_annotates_estimates_and_sizing():
+    plan = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),))
+    opt = PL.optimize(plan, [ORDERS], 8, [LO_STATS])
+    txt = PL.explain(opt, [ORDERS], [LO_STATS])
+    assert "~rows=32" in txt and "cost-sized" in txt and "bucket=" in txt
+    # without stats the old golden format is unchanged
+    plain = PL.explain(PL.optimize(plan, [ORDERS], 8))
+    assert "~rows" not in plain and "cost-sized" not in plain
+
+
+def test_analyzed_collect_matches_eager_and_attaches_stats(ctx):
+    # stats-driven planning must never change results: fused-over-analyzed
+    # == eager-over-raw, bit for bit (single shard: sizing disabled, the
+    # byte-compat contract; the 8-shard sizing path is covered by
+    # dist_cases 'cost_groupby'/'overflow_retry' and bench_cost)
+    t = int_table(300, 40, 77)
+    raw = ctx.scatter(t)
+    analyzed = ctx.analyze(raw)
+    assert analyzed.stats is not None and analyzed.stats.rows == 300.0
+    aggs = (("d0", "sum"), ("d0", "count"), ("d0", "min"))
+    eager, _ = ctx.groupby(raw, "k", aggs)
+    fused = ctx.frame(analyzed).groupby("k", aggs).collect()
+    assert_tables_equal(eager, fused)
+    assert fused.stats is not None and fused.stats.rows <= 80.0
+    assert ctx.overflow_retries == 0
+    # the propagated estimate feeds a SECOND hop without re-analyzing
+    hop2 = ctx.frame(fused).sort("k").collect()
+    assert hop2.stats is not None
+
+
+def test_cost_sized_stats_mask_mirrors_executor_order(ctx):
+    # the retry gate attributes each ShuffleStats entry to its node via a
+    # static walk — it must line up 1:1 with what execute_plan emits
+    frame = (ctx.frame(ctx.scatter(int_table(60, 10, 5)))
+             .join(ctx.frame(ctx.scatter(int_table(60, 10, 6))), "k")
+             .groupby("k", (("d0", "sum"),))
+             .sort("k").limit(5))
+    plan = frame.optimized()
+    _, stats = frame.collect_with_stats()
+    mask = PL.cost_sized_stats_mask(plan)
+    assert len(mask) == len(stats), (len(mask), len(stats))
+    assert not any(mask)  # nothing sized without stats
+    # sized nodes flag exactly their own entries
+    sized_join = PL.optimize(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                             [ORDERS, USERS], 8, [HI_STATS, HI_STATS])
+    assert PL.cost_sized_stats_mask(sized_join) == [True, True]
+    user_out = PL.optimize(
+        PL.Join(PL.Scan(0), PL.Scan(1), ("k",), bucket_capacity=9,
+                out_capacity=9), [ORDERS, USERS], 8, [HI_STATS, HI_STATS])
+    assert PL.cost_sized_stats_mask(user_out) == [False, False]
+
+
+def test_retry_replan_is_the_no_stats_plan():
+    # what the overflow retry executes: the same logical plan re-optimized
+    # WITHOUT stats — nothing sized, distinct jit cache key from the
+    # sized first attempt (end-to-end retry: dist_cases 'overflow_retry')
+    plan = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),))
+    sized = PL.optimize(plan, [ORDERS], 8, [LO_STATS])
+    safe = PL.optimize(plan, [ORDERS], 8)
+    assert PL.plan_cost_sized(sized) and not PL.plan_cost_sized(safe)
+    assert PL.canonical_key(sized) != PL.canonical_key(safe)
+    assert safe.bucket_capacity is None  # executor fallback sizing applies
+
+
+def test_safe_capacity_mode_uses_unoverflowable_buckets(ctx):
+    # execute_plan(safe_capacity=True) must size every unset bucket at the
+    # full source capacity — the retry mode a skewed send cannot overflow
+    plan = PL.Repartition(PL.Scan(0), ("k",))
+    t = ctx.scatter(Table.from_arrays({"k": np.arange(64, dtype=np.int32)}))
+    report: list = []
+
+    def body(*tabs):
+        return PL.execute_plan(plan, tabs, axis_name=ctx.axis_name,
+                               num_shards=ctx.num_shards, report=report,
+                               safe_capacity=True)
+
+    jax.eval_shape(ctx._make_global(body), (t.columns, t.row_counts))
+    assert report[0]["bucket"] == 64  # == capacity, not capacity*slack/p
+
+
 # --- Table.empty N-D schemas (satellite) --------------------------------------
 
 
