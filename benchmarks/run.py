@@ -10,6 +10,7 @@ Sections:
   lazy plan fusion: fused vs eager ETL chain (bench_plan)
   sort->join chains: range provenance vs re-shuffling (bench_sort_chain)
   cost-model planning: stats-driven strategy + sizing (bench_cost)
+  window functions: boundary-carry elision vs re-shuffle (bench_window)
   Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
 
 --json writes every section's tables as machine-readable records (the
@@ -35,7 +36,7 @@ def main() -> None:
     from benchmarks import (bench_binding_overhead, bench_cost,
                             bench_groupby, bench_kernels, bench_plan,
                             bench_scaling, bench_sort_chain,
-                            bench_vs_baselines)
+                            bench_vs_baselines, bench_window)
 
     print(f"# benchmark run (quick={quick})")
     sections = [
@@ -46,6 +47,7 @@ def main() -> None:
         ("plan", bench_plan.main),
         ("sort_chain", bench_sort_chain.main),
         ("cost", bench_cost.main),
+        ("window", bench_window.main),
         ("scaling", bench_scaling.main),
     ]
     results: dict[str, list[dict]] = {}

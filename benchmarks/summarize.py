@@ -1,0 +1,80 @@
+"""Merge bench JSON artifacts into one markdown summary.
+
+    python -m benchmarks.summarize out.md file1.json [file2.json ...]
+    python -m benchmarks.summarize - bench-*.json   # write to stdout
+
+Each input is a ``benchmarks.run --json`` payload (or a single-bench
+export with the same ``{"sections": {name: [tables]}}`` shape). CI feeds
+the merged output to ``$GITHUB_STEP_SUMMARY`` so the per-run perf
+trajectory — AllToAll counts, wire bytes, wall clock, bit-identity gates —
+is readable on the run page without downloading artifacts. Duplicate
+sections across inputs (e.g. the full run plus a standalone re-export)
+are emitted once, first occurrence wins.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def table_markdown(table: dict) -> str:
+    """One benchmarks.common.Table dict -> a markdown table with title."""
+    cols = table["columns"]
+    lines = [f"**{table['title']}**", "",
+             "| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for row in table["rows"]:
+        lines.append("| " + " | ".join(_fmt(v) for v in row) + " |")
+    return "\n".join(lines)
+
+
+def summarize(paths: list[str]) -> str:
+    seen: set[str] = set()
+    out = ["# Benchmark summary"]
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            out.append(f"\n> could not read `{path}`: {e}")
+            continue
+        sections = payload.get("sections", {})
+        meta = []
+        if payload.get("quick"):
+            meta.append("quick mode")
+        if "elapsed_seconds" in payload:
+            meta.append(f"{payload['elapsed_seconds']:.0f}s")
+        for name, tables in sections.items():
+            if name in seen:
+                continue
+            seen.add(name)
+            out.append(f"\n## {name}" + (f" ({', '.join(meta)})"
+                                         if meta else ""))
+            for t in tables:
+                out.append("\n" + table_markdown(t))
+    if len(out) == 1:
+        out.append("\n_no benchmark sections found_")
+    return "\n".join(out) + "\n"
+
+
+def main() -> None:
+    if len(sys.argv) < 3:
+        sys.exit(__doc__)
+    dest, paths = sys.argv[1], sys.argv[2:]
+    text = summarize(paths)
+    if dest == "-":
+        sys.stdout.write(text)
+    else:
+        with open(dest, "a") as f:
+            f.write(text)
+        print(f"[summary] wrote {dest} from {len(paths)} file(s)")
+
+
+if __name__ == "__main__":
+    main()

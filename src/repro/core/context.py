@@ -491,6 +491,30 @@ class DistContext:
                        samples_per_shard=samples_per_shard)
         return self._run_plan(plan, [a], report=report)
 
+    def window(self, t: DistTable, by, funcs, *, order_by=(),
+               bucket_capacity=None, samples_per_shard: int = 64,
+               report: list | None = None):
+        """Distributed window functions (rank/lag/running aggregates).
+
+        Range-partitions on (by + order_by) like :meth:`sort`, then
+        computes every function with per-shard segment scans plus a
+        boundary-carry ``all_gather`` (p scalars per carried partial —
+        no AllToAll) for groups spanning shards. A table already range-
+        partitioned on a matching key prefix (a :meth:`sort` output fed
+        back through the one-node plan) skips the shuffle entirely. The
+        result carries a :class:`RangePartitioning` tag on (by +
+        order_by), so downstream sorts/groupbys/joins elide shuffles off
+        it just like a sort output.
+        """
+        by_t = (by,) if isinstance(by, str) else tuple(by)
+        order_t = (order_by,) if isinstance(order_by, str) \
+            else tuple(order_by)
+        pairs = A.normalize_funcs(funcs)
+        plan = PL.Window(PL.Scan(0), by_t, order_t, pairs,
+                         bucket_capacity=bucket_capacity,
+                         samples_per_shard=samples_per_shard)
+        return self._run_plan(plan, [t], report=report)
+
     def limit(self, t: DistTable, n: int, *, report: list | None = None
               ) -> DistTable:
         """True global head-n (counts prefix-scan -> per-shard quota).

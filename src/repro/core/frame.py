@@ -132,6 +132,28 @@ class LazyFrame:
                                    bucket_capacity=bucket_capacity,
                                    samples_per_shard=samples_per_shard))
 
+    def window(self, by, funcs, *, order_by=(), bucket_capacity=None,
+               samples_per_shard: int = 64) -> "LazyFrame":
+        """Window functions over (by, order_by)-sorted segments —
+        row-preserving analytics: ``rank``, ``dense_rank``,
+        ``row_number``, ``lag``/``lead`` (offsets via ``("lag", col,
+        k)``), ``cumsum``, ``cummax``, ``running_mean``. Result columns
+        are appended (``rank``, ``{col}_cumsum``, ...) and rows come back
+        in (by, order_by) order.
+
+        Lowering mirrors :meth:`sort`: an unsorted input pays ONE range-
+        partition AllToAll; an input the optimizer can prove range-
+        partitioned on a (by + order_by) prefix — e.g. a preceding
+        ``.sort(...)`` — elides it entirely and pays only a p-sized
+        boundary ``all_gather`` for the cross-shard group carries."""
+        by_t = (by,) if isinstance(by, str) else tuple(by)
+        order_t = (order_by,) if isinstance(order_by, str) \
+            else tuple(order_by)
+        pairs = A.normalize_funcs(funcs)
+        return self._chain(PL.Window(self._plan, by_t, order_t, pairs,
+                                     bucket_capacity=bucket_capacity,
+                                     samples_per_shard=samples_per_shard))
+
     def union(self, other, *, bucket_capacity=None, seed: int = 7
               ) -> "LazyFrame":
         other = self._lift(other)

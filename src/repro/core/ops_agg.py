@@ -22,6 +22,16 @@ same machinery: ``groupby == finalize ∘ partial_groupby`` locally, and
 
 Output Table: one row per group (compacted to the front, ordered by key),
 columns = key columns + ``{col}_{agg}`` result columns.
+
+Window functions (:func:`window`) ride the same sorted-segment machinery
+but are ROW-preserving: sort by (keys, order), detect group segments and
+value runs, then express every function as a segmented prefix scan
+(``kernels/segment_scan.py``) or an in-segment gather. The module exposes
+the building blocks (:func:`window_state`, :func:`window_sorted`,
+:func:`window_summary`, :func:`window_lead_summary`) separately so
+``ops_dist.dist_window`` can run them per shard over a globally sorted
+frame and stitch shard boundaries with carried partial state instead of a
+shuffle.
 """
 from __future__ import annotations
 
@@ -234,3 +244,372 @@ def combine_groupby(partials: Table, keys: Sequence[str] | str, aggs, *,
                                  group_valid, use_kernel)
     merged = Table(cols, row_count)
     return _finalize(merged, keys, pairs)
+
+
+# ---------------------------------------------------------------------------
+# window functions (row-preserving analytics over sorted segments)
+# ---------------------------------------------------------------------------
+
+WINDOW_FUNCS = ("rank", "dense_rank", "row_number", "lag", "lead",
+                "cumsum", "cummax", "running_mean")
+_NO_COL_FUNCS = ("rank", "dense_rank", "row_number")
+_SCAN_COL_FUNCS = ("cumsum", "cummax", "running_mean")
+
+
+def normalize_funcs(funcs) -> tuple[tuple[str, str | None, int], ...]:
+    """Canonicalize a window-function spec to ``((fn, col, offset), ...)``.
+
+    Accepts a single string, or a sequence of: ``"rank"`` (column-free
+    funcs), ``("cumsum", "d0")``, ``("lag", "d0")`` (offset defaults to
+    1), ``("lag", "d0", 3)``. The canonical tuple is hashable — it is the
+    plan-node field and part of the jit-cache key.
+    """
+    if isinstance(funcs, str):
+        funcs = [funcs]
+    out = []
+    for f in funcs:
+        if isinstance(f, str):
+            fn, col, off = f, None, 0
+        else:
+            f = tuple(f)
+            fn, col = f[0], f[1]
+            off = int(f[2]) if len(f) > 2 else 0
+        assert fn in WINDOW_FUNCS, (fn, WINDOW_FUNCS)
+        if fn in _NO_COL_FUNCS:
+            assert col is None, f"{fn} takes no column (got {col!r})"
+        else:
+            assert col is not None, f"{fn} needs a column"
+        if fn in ("lag", "lead"):
+            off = 1 if off == 0 else off
+            assert off >= 1, (fn, off)
+        else:
+            assert off == 0, f"{fn} takes no offset"
+        out.append((fn, col, off))
+    return tuple(out)
+
+
+def window_output_name(fn: str, col: str | None, offset: int = 0) -> str:
+    """Output column name: ``rank`` / ``{col}_cumsum`` / ``{col}_lag`` /
+    ``{col}_lag{k}`` for offsets beyond the default 1."""
+    if col is None:
+        return fn
+    if fn in ("lag", "lead") and offset > 1:
+        return f"{col}_{fn}{offset}"
+    return f"{col}_{fn}"
+
+
+def carry_requirements(pairs):
+    """Static description of the cross-shard carry a funcs set needs:
+    ``(sums, maxs, lag, lead)`` where sums maps internal slot name ->
+    (col, 'native'|'f32'), maxs is a column set, lag/lead map col -> the
+    largest requested offset (the boundary-buffer depth)."""
+    sums: dict[str, tuple[str, str]] = {}
+    maxs: set[str] = set()
+    lag: dict[str, int] = {}
+    lead: dict[str, int] = {}
+    for fn, col, off in pairs:
+        if fn == "cumsum":
+            sums[f"cumsum:{col}"] = (col, "native")
+        elif fn == "running_mean":
+            sums[f"rmean:{col}"] = (col, "f32")
+        elif fn == "cummax":
+            maxs.add(col)
+        elif fn == "lag":
+            lag[col] = max(lag.get(col, 0), off)
+        elif fn == "lead":
+            lead[col] = max(lead.get(col, 0), off)
+    return sums, maxs, lag, lead
+
+
+def _dtype_min(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+
+
+def _tuple_eq(cols_a, cols_b) -> jax.Array:
+    """Scalar equality of two same-keyed dicts of scalars (True if empty)."""
+    eq = jnp.asarray(True)
+    for k in cols_a:
+        eq = eq & (cols_a[k] == cols_b[k])
+    return eq
+
+
+def window_state(st: Table, by: Sequence[str], order_by: Sequence[str]):
+    """Segment/run geometry of an ALREADY (by + order_by)-sorted table.
+
+    Returns a dict of per-row arrays: ``seg`` (group id, -1 invalid),
+    ``starts`` (group start row, scatter-indexed by group id), ``pos``
+    (0-based position within group), ``vb`` (True at the first row of
+    each (by + order_by) value run), ``num_groups``, and ``end_excl``
+    (one past the row's group's last row).
+    """
+    cap = st.capacity
+    valid = st.valid_mask()
+    pos0 = jnp.arange(cap) == 0
+    differs_by = jnp.zeros((cap,), bool)
+    for k in by:
+        col = st.columns[k]
+        differs_by = differs_by | (col != jnp.roll(col, 1))
+    boundary = valid & (differs_by | pos0)
+    seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+    seg = jnp.where(valid, seg, -1)
+    num_groups = jnp.sum(boundary).astype(jnp.int32)
+    starts = jnp.zeros((cap,), jnp.int32).at[
+        jnp.where(boundary, seg, cap)].set(jnp.arange(cap, dtype=jnp.int32),
+                                           mode="drop")
+    differs_run = differs_by
+    for k in order_by:
+        col = st.columns[k]
+        differs_run = differs_run | (col != jnp.roll(col, 1))
+    vb = valid & (differs_run | pos0)
+    pos = jnp.arange(cap, dtype=jnp.int32) - starts[
+        jnp.clip(seg, 0, cap - 1)]
+    pos = jnp.where(valid, pos, 0)
+    next_start = starts[jnp.clip(seg + 1, 0, cap - 1)]
+    end_excl = jnp.where(seg + 1 < num_groups, next_start, st.row_count)
+    end_excl = jnp.where(valid, end_excl, 0)
+    return {"seg": seg, "starts": starts, "pos": pos, "vb": vb,
+            "num_groups": num_groups, "end_excl": end_excl}
+
+
+def window_sorted(st: Table, state, by: Sequence[str],
+                  order_by: Sequence[str], pairs, *, carry=None,
+                  lead_carry=None, use_kernel=None) -> dict[str, jax.Array]:
+    """Window output columns over a (by + order_by)-sorted table.
+
+    ``carry`` / ``lead_carry`` are the cross-shard boundary states built
+    by ``ops_dist`` (None for a purely local frame): ``carry`` folds the
+    preceding shards' trailing-group partials into this shard's LEADING
+    group, ``lead_carry`` folds the following shards' heading-group
+    values into this shard's TRAILING group (lead only). Every function
+    is exact under both — the distributed result is bit-identical to the
+    single-host computation on integer-valued columns.
+    """
+    cap = st.capacity
+    valid = st.valid_mask()
+    seg, pos, vb = state["seg"], state["pos"], state["vb"]
+    end_excl, num_groups = state["end_excl"], state["num_groups"]
+    arange = jnp.arange(cap, dtype=jnp.int32)
+    sums_req, maxs_req, lag_req, lead_req = carry_requirements(pairs)
+    fns = {fn for fn, _, _ in pairs}
+
+    rn = pos + 1  # 1-based row number within group
+    dr_local = rk = None
+    if "dense_rank" in fns or "rank" in fns:
+        dr_local = kops.segment_scan(vb.astype(jnp.int32), seg, "sum",
+                                     use_kernel=use_kernel)
+        dr = dr_local
+    if "rank" in fns:
+        rk = kops.segment_scan(jnp.where(vb, rn, 0).astype(jnp.int32), seg,
+                               "max", use_kernel=use_kernel)
+    cs = {}
+    for name, (col, kind) in sums_req.items():
+        v = st.columns[col]
+        v = v.astype(jnp.float32) if kind == "f32" else v
+        cs[name] = kops.segment_scan(v, seg, "sum", use_kernel=use_kernel)
+    cm = {col: kops.segment_scan(st.columns[col], seg, "max",
+                                 use_kernel=use_kernel) for col in maxs_req}
+    lg = {}
+    ld = {}
+    for fn, col, off in pairs:
+        if fn == "lag":
+            v = st.columns[col][jnp.clip(arange - off, 0, cap - 1)]
+            lg[(col, off)] = jnp.where(valid & (pos >= off), v,
+                                       jnp.zeros_like(v))
+        elif fn == "lead":
+            v = st.columns[col][jnp.clip(arange + off, 0, cap - 1)]
+            ld[(col, off)] = jnp.where(valid & (arange + off < end_excl), v,
+                                       jnp.zeros_like(v))
+
+    if carry is not None:
+        first_by = {k: st.columns[k][0] for k in by}
+        match = carry["has"] & (st.row_count > 0) \
+            & _tuple_eq(first_by, carry["key"])
+        m = (seg == 0) & match
+        C = carry["count"]
+        if "rank" in fns or "dense_rank" in fns:
+            first_order = {k: st.columns[k][0] for k in order_by}
+            cont = match & _tuple_eq(first_order, carry["last_order"])
+        if "rank" in fns:
+            # rows continuing the previous shards' trailing VALUE RUN take
+            # the run's global rank (C - E + 1); other leading-group rows
+            # shift by the carried row count
+            run0 = m & (dr_local == 1)
+            rk = jnp.where(run0 & cont, C - carry["run_eq"] + 1,
+                           jnp.where(m, rk + C, rk))
+        if "dense_rank" in fns:
+            dr = jnp.where(m, dr + carry["runs"] - cont.astype(jnp.int32),
+                           dr)
+        rn = jnp.where(m, rn + C, rn)
+        for name in cs:
+            cs[name] = jnp.where(m, cs[name] + carry["sums"][name], cs[name])
+        for col in cm:
+            cm[col] = jnp.where(m, jnp.maximum(cm[col], carry["maxs"][col]),
+                                cm[col])
+        for (col, off), v in lg.items():
+            buf = carry["lag"][col]  # (K,): buf[j] = j+1 rows before the cut
+            j = off - 1 - pos
+            take = m & (pos < off) & (j < C)
+            lg[(col, off)] = jnp.where(
+                take, buf[jnp.clip(j, 0, buf.shape[0] - 1)], v)
+
+    if lead_carry is not None:
+        idx_last = jnp.maximum(st.row_count - 1, 0)
+        last_by = {k: st.columns[k][idx_last] for k in by}
+        match_l = lead_carry["has"] & (st.row_count > 0) \
+            & _tuple_eq(last_by, lead_carry["key"])
+        in_last = valid & (seg == num_groups - 1)
+        e = end_excl - 1 - arange  # rows after this one within its group
+        H = lead_carry["head_count"]
+        for (col, off), v in ld.items():
+            buf = lead_carry["head"][col]  # (K,): buf[j] = j-th row after cut
+            j = off - 1 - e
+            take = in_last & match_l & (e < off) & (j < H)
+            ld[(col, off)] = jnp.where(
+                take, buf[jnp.clip(j, 0, buf.shape[0] - 1)], v)
+
+    out: dict[str, jax.Array] = {}
+    for fn, col, off in pairs:
+        name = window_output_name(fn, col, off)
+        if fn == "row_number":
+            out[name] = jnp.where(valid, rn, 0).astype(jnp.int32)
+        elif fn == "rank":
+            out[name] = jnp.where(valid, rk, 0).astype(jnp.int32)
+        elif fn == "dense_rank":
+            out[name] = jnp.where(valid, dr, 0).astype(jnp.int32)
+        elif fn == "cumsum":
+            v = cs[f"cumsum:{col}"]
+            out[name] = jnp.where(valid, v, jnp.zeros_like(v))
+        elif fn == "cummax":
+            v = cm[col]
+            out[name] = jnp.where(valid, v, jnp.zeros_like(v))
+        elif fn == "running_mean":
+            v = cs[f"rmean:{col}"] / jnp.maximum(rn, 1).astype(jnp.float32)
+            out[name] = jnp.where(valid, v, 0.0)
+        elif fn == "lag":
+            out[name] = lg[(col, off)]
+        elif fn == "lead":
+            out[name] = ld[(col, off)]
+    return out
+
+
+def window_summary(st: Table, state, by: Sequence[str],
+                   order_by: Sequence[str], pairs):
+    """This shard's TRAILING-group boundary state (for the next shards).
+
+    All scalars / fixed (K,) buffers — the per-shard payload of the
+    boundary ``all_gather``: the trailing group's row count, algebraic
+    partials (sum/max per carried column), value-run count, trailing-run
+    size, the boundary key/order tuples, and the last ``K`` values per
+    lag column (K = largest requested offset).
+    """
+    cap = st.capacity
+    rc = st.row_count
+    valid = st.valid_mask()
+    idx_last = jnp.maximum(rc - 1, 0)
+    starts, vb = state["starts"], state["vb"]
+    num_groups = state["num_groups"]
+    gstart = starts[jnp.clip(num_groups - 1, 0, cap - 1)]
+    count = (rc - gstart).astype(jnp.int32)
+    tm = (jnp.arange(cap) >= gstart) & valid
+    sums_req, maxs_req, lag_req, _ = carry_requirements(pairs)
+
+    eq_last = jnp.ones((cap,), bool)
+    for k in order_by:
+        col = st.columns[k]
+        eq_last = eq_last & (col == col[idx_last])
+    summ = {
+        "rows": rc,
+        "first_by": {k: st.columns[k][0] for k in by},
+        "last_by": {k: st.columns[k][idx_last] for k in by},
+        "first_order": {k: st.columns[k][0] for k in order_by},
+        "last_order": {k: st.columns[k][idx_last] for k in order_by},
+        "count": count,
+        "runs": jnp.sum(vb & tm).astype(jnp.int32),
+        "run_eq": jnp.sum(tm & eq_last).astype(jnp.int32),
+        "sums": {}, "maxs": {}, "lag": {},
+    }
+    for name, (col, kind) in sums_req.items():
+        v = st.columns[col]
+        v = v.astype(jnp.float32) if kind == "f32" else v
+        summ["sums"][name] = jnp.sum(jnp.where(tm, v, jnp.zeros_like(v)))
+    for col in maxs_req:
+        v = st.columns[col]
+        summ["maxs"][col] = jnp.max(jnp.where(tm, v, _dtype_min(v.dtype)))
+    for col, k in lag_req.items():
+        idxs = rc - 1 - jnp.arange(k, dtype=jnp.int32)
+        ok = (idxs >= gstart) & (idxs >= 0)
+        v = st.columns[col][jnp.clip(idxs, 0, cap - 1)]
+        summ["lag"][col] = jnp.where(ok, v, jnp.zeros_like(v))
+    return summ
+
+
+def window_lead_summary(st: Table, state, by: Sequence[str], pairs):
+    """This shard's HEADING-group boundary state (for the previous shards):
+    the heading group's row count and its first ``K`` values per lead
+    column."""
+    cap = st.capacity
+    rc = st.row_count
+    starts, num_groups = state["starts"], state["num_groups"]
+    head = jnp.where(num_groups > 1, starts[jnp.clip(1, 0, cap - 1)], rc)
+    head = head.astype(jnp.int32)
+    _, _, _, lead_req = carry_requirements(pairs)
+    idx_last = jnp.maximum(rc - 1, 0)
+    summ = {
+        "rows": rc,
+        "first_by": {k: st.columns[k][0] for k in by},
+        "last_by": {k: st.columns[k][idx_last] for k in by},
+        "head_count": head,
+        "head": {},
+    }
+    for col, k in lead_req.items():
+        idxs = jnp.arange(k, dtype=jnp.int32)
+        v = st.columns[col][jnp.clip(idxs, 0, cap - 1)]
+        summ["head"][col] = jnp.where(idxs < head, v, jnp.zeros_like(v))
+    return summ
+
+
+def _window_validate(table: Table, by, order_by, pairs):
+    for k in list(by) + list(order_by):
+        assert table.columns[k].ndim == 1, f"window key {k!r} must be 1-D"
+    for fn, col, off in pairs:
+        name = window_output_name(fn, col, off)
+        assert name not in table.columns, (
+            f"window output {name!r} collides with an input column")
+        if col is None:
+            continue
+        v = table.columns[col]
+        assert v.ndim == 1, f"window input {col!r} must be 1-D"
+        if fn in _SCAN_COL_FUNCS:
+            assert v.dtype in (jnp.float32, jnp.int32), (
+                f"{fn} needs f32/i32 input; {col!r} is {v.dtype}")
+
+
+def window(table: Table, by: Sequence[str] | str, funcs, *,
+           order_by: Sequence[str] | str = (), use_kernel=None) -> Table:
+    """Window functions over sorted segments — row-preserving analytics.
+
+    ``by``: partition key column(s); ``order_by``: in-group ordering
+    column(s); ``funcs``: see :func:`normalize_funcs`. Returns the input
+    rows SORTED by (by, order_by) — the canonical frame order — with one
+    appended column per requested function (:func:`window_output_name`):
+
+    ``rank``/``dense_rank``/``row_number`` (int32, 1-based; ties on the
+    full (by, order_by) tuple share rank), ``lag``/``lead`` (the value
+    ``offset`` rows away within the group, 0 outside it — the
+    static-shape NULL analog), ``cumsum``/``cummax`` (running aggregate
+    in the column dtype), ``running_mean`` (f32).
+    """
+    by = [by] if isinstance(by, str) else list(by)
+    order = [order_by] if isinstance(order_by, str) else list(order_by)
+    pairs = normalize_funcs(funcs)
+    _window_validate(table, by, order, pairs)
+    if table.capacity == 0:
+        table = Table({k: jnp.zeros((1,) + v.shape[1:], v.dtype)
+                       for k, v in table.columns.items()}, table.row_count)
+    st = L.sort_by(table, by + order)
+    state = window_state(st, by, order)
+    cols = window_sorted(st, state, by, order, pairs, use_kernel=use_kernel)
+    return Table({**st.columns, **cols}, st.row_count)

@@ -364,6 +364,197 @@ def dist_groupby(
     raise ValueError(strategy)
 
 
+def _fold_window_carry(gathered, by, order_by, p: int, k_of):
+    """Left-to-right fold of the all-gathered trailing-group summaries.
+
+    ``gathered`` holds every shard's :func:`ops_agg.window_summary` with a
+    leading (p,) axis on each leaf. Walking shards in global sort order
+    (a static python loop — p is small), the running state describes the
+    trailing group of the prefix processed so far; shard i's carry is the
+    state BEFORE shard i is folded in. The fold is pure scalar/(K,) math
+    on already-local data: the only wire traffic was the p-sized
+    all_gather of the summaries — never an AllToAll.
+    """
+    def at(k):
+        return jax.tree.map(lambda x: x[k], gathered)
+
+    tuple_eq = A._tuple_eq  # same comparison the local carry apply uses
+
+    s0 = at(0)
+    state = {
+        "has": jnp.asarray(False),
+        "key": jax.tree.map(jnp.zeros_like, s0["last_by"]),
+        "last_order": jax.tree.map(jnp.zeros_like, s0["last_order"]),
+        "count": jnp.zeros((), jnp.int32),
+        "runs": jnp.zeros((), jnp.int32),
+        "run_eq": jnp.zeros((), jnp.int32),
+        "sums": jax.tree.map(jnp.zeros_like, s0["sums"]),
+        "maxs": jax.tree.map(jnp.zeros_like, s0["maxs"]),
+        "lag": jax.tree.map(jnp.zeros_like, s0["lag"]),
+    }
+    states = [state]
+    for k in range(p - 1):
+        sk = at(k)
+        nonempty = sk["rows"] > 0
+        one_group = tuple_eq(sk["first_by"], sk["last_by"])
+        cont_group = state["has"] & tuple_eq(sk["first_by"], state["key"])
+        # the prefix's trailing group extends through shard k only when
+        # shard k is entirely ONE group continuing the carried key —
+        # otherwise shard k's own trailing group replaces the state
+        combine = nonempty & one_group & cont_group
+        cont_run = combine & tuple_eq(sk["first_order"],
+                                      state["last_order"])
+        run_merge = combine & tuple_eq(sk["last_order"],
+                                       state["last_order"])
+        new = {
+            "has": state["has"] | nonempty,
+            "key": dict(sk["last_by"]),
+            "last_order": dict(sk["last_order"]),
+            "count": jnp.where(combine, state["count"] + sk["count"],
+                               sk["count"]),
+            "runs": jnp.where(combine,
+                              state["runs"] + sk["runs"]
+                              - cont_run.astype(jnp.int32), sk["runs"]),
+            "run_eq": jnp.where(run_merge, state["run_eq"] + sk["run_eq"],
+                                sk["run_eq"]),
+            "sums": {n: jnp.where(combine, state["sums"][n] + v, v)
+                     for n, v in sk["sums"].items()},
+            "maxs": {n: jnp.where(combine, jnp.maximum(state["maxs"][n], v),
+                                  v) for n, v in sk["maxs"].items()},
+            "lag": {},
+        }
+        for col, buf in sk["lag"].items():
+            kk = buf.shape[0]
+            jj = jnp.arange(kk, dtype=jnp.int32)
+            prev = state["lag"][col][jnp.clip(jj - sk["count"], 0, kk - 1)]
+            new["lag"][col] = jnp.where(combine & (jj >= sk["count"]), prev,
+                                        buf)
+        # an empty shard leaves the prefix state untouched
+        state = jax.tree.map(
+            lambda n, o: jnp.where(nonempty, n, o), new, state)
+        states.append(state)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    return jax.tree.map(lambda x: x[k_of], stacked)
+
+
+def _fold_window_lead_carry(gathered, by, p: int, k_of):
+    """Right-to-left fold of the heading-group summaries (the lead
+    counterpart of :func:`_fold_window_carry`): shard i's state describes
+    the heading group of shards i+1..p-1."""
+    def at(k):
+        return jax.tree.map(lambda x: x[k], gathered)
+
+    tuple_eq = A._tuple_eq
+
+    s0 = at(0)
+    state = {"has": jnp.asarray(False),
+             "key": jax.tree.map(jnp.zeros_like, s0["first_by"]),
+             "head_count": jnp.zeros((), jnp.int32),
+             "head": jax.tree.map(jnp.zeros_like, s0["head"])}
+    states = [None] * p
+    for k in reversed(range(p)):
+        states[k] = state
+        if k == 0:
+            break
+        sk = at(k)
+        nonempty = sk["rows"] > 0
+        one_group = tuple_eq(sk["first_by"], sk["last_by"])
+        cont = state["has"] & tuple_eq(sk["last_by"], state["key"])
+        combine = nonempty & one_group & cont
+        new = {
+            "has": state["has"] | nonempty,
+            "key": dict(sk["first_by"]),
+            "head_count": jnp.where(combine,
+                                    sk["rows"] + state["head_count"],
+                                    sk["head_count"]),
+            "head": {},
+        }
+        for col, buf in sk["head"].items():
+            kk = buf.shape[0]
+            jj = jnp.arange(kk, dtype=jnp.int32)
+            nxt = state["head"][col][jnp.clip(jj - sk["rows"], 0, kk - 1)]
+            new["head"][col] = jnp.where(combine & (jj >= sk["rows"]), nxt,
+                                         buf)
+        state = jax.tree.map(
+            lambda n, o: jnp.where(nonempty, n, o), new, state)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    return jax.tree.map(lambda x: x[k_of], stacked)
+
+
+def dist_window(
+    table: Table,
+    by: Sequence[str] | str,
+    funcs,
+    *,
+    axis_name: str,
+    bucket_capacity: int,
+    order_by: Sequence[str] | str = (),
+    samples_per_shard: int = 64,
+    skip_shuffle: bool = False,
+    use_kernel=None,
+    report: list | None = None,
+):
+    """Distributed window functions: range partition -> local sort ->
+    per-shard segment scans + cross-shard boundary carry.
+
+    The input is range-partitioned on (by + order_by) exactly like
+    ``dist_sort`` (sampled lexicographic splitters), so after the local
+    sort every shard holds a contiguous slice of the globally sorted
+    frame. ``skip_shuffle`` is the provenance fast path: an input already
+    range-partitioned on a (by + order_by) prefix — a ``dist_sort``
+    output — skips both the AllToAll and pays only the boundary exchange.
+
+    Groups that span shard boundaries are stitched EXACTLY: each shard
+    publishes its trailing-group partial state (and heading-group lead
+    values) in one p-sized ``all_gather`` of scalars/(K,) buffers — no
+    AllToAll — and a static fold hands every shard the combined carry of
+    all preceding (resp. following) shards. Bit-identical to the
+    single-host ``ops_agg.window`` on integer-valued columns.
+    """
+    by_l = [by] if isinstance(by, str) else list(by)
+    order_l = [order_by] if isinstance(order_by, str) else list(order_by)
+    keys = by_l + order_l
+    pairs = A.normalize_funcs(funcs)
+    p = axis_size(axis_name)
+
+    if skip_shuffle:
+        t2, st = _shuffle(table, keys, axis_name=axis_name,
+                          bucket_capacity=bucket_capacity, seed=0, skip=True,
+                          report=report, label="window")
+    else:
+        pid = _lex_splitter_pids(table, keys, axis_name=axis_name,
+                                 samples_per_shard=samples_per_shard)
+        t2, st = _shuffle(table, keys, axis_name=axis_name,
+                          bucket_capacity=bucket_capacity, seed=0, pid=pid,
+                          report=report, label="window")
+    if t2.capacity == 0:
+        t2 = Table({k: jnp.zeros((1,) + v.shape[1:], v.dtype)
+                    for k, v in t2.columns.items()}, t2.row_count)
+    A._window_validate(t2, by_l, order_l, pairs)
+    sorted_t = L.sort_by(t2, keys)
+    state = A.window_state(sorted_t, by_l, order_l)
+
+    carry = lead_carry = None
+    if p > 1:
+        idx = jax.lax.axis_index(axis_name)
+        summ = A.window_summary(sorted_t, state, by_l, order_l, pairs)
+        gathered = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_name), summ)
+        carry = _fold_window_carry(gathered, by_l, order_l, p, idx)
+        _, _, _, lead_req = A.carry_requirements(pairs)
+        if lead_req:
+            lsumm = A.window_lead_summary(sorted_t, state, by_l, pairs)
+            lgathered = jax.tree.map(
+                lambda x: jax.lax.all_gather(x, axis_name), lsumm)
+            lead_carry = _fold_window_lead_carry(lgathered, by_l, p, idx)
+
+    cols = A.window_sorted(sorted_t, state, by_l, order_l, pairs,
+                           carry=carry, lead_carry=lead_carry,
+                           use_kernel=use_kernel)
+    out = Table({**sorted_t.columns, **cols}, sorted_t.row_count)
+    return out, (st,)
+
+
 def _lex_splitter_pids(table: Table, by: Sequence[str], *, axis_name: str,
                        samples_per_shard: int) -> jax.Array:
     """Sampled range partition over one or more key columns.

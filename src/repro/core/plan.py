@@ -64,6 +64,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import ops_agg as A
 from repro.core import ops_dist as D
 from repro.core import ops_local as L
 from repro.core import stats as S
@@ -190,6 +191,29 @@ class Sort(Node):
 
 
 @dataclass(frozen=True)
+class Window(Node):
+    """Row-preserving window functions over (by, order_by)-sorted segments.
+
+    Lowers to ``ops_dist.dist_window``: range partition on (by + order_by)
+    — the dist_sort placement — then per-shard segment scans with a
+    boundary-carry all_gather (never an AllToAll). An input already
+    range-partitioned on a (by + order_by) prefix (a Sort output, or a
+    previous Window) elides the shuffle entirely: the optimizer's prefix
+    rules apply exactly as they do to Sort. ``funcs`` is the canonical
+    ``ops_agg.normalize_funcs`` tuple.
+    """
+
+    child: Node
+    by: tuple[str, ...]
+    order_by: tuple[str, ...]
+    funcs: tuple[tuple, ...]
+    bucket_capacity: int | None = None
+    samples_per_shard: int = 64
+    skip_shuffle: bool = False
+    sized: bool = False  # bucket filled in by the cost model (estimate!)
+
+
+@dataclass(frozen=True)
 class SetOp(Node):
     """Shared shape of the whole-row-hash binary operators."""
 
@@ -301,6 +325,20 @@ class _Analysis:
                 else:
                     sds = base
                 out[f"{col}_{op}"] = sds
+            return out
+        if isinstance(node, Window):
+            out = dict(self.schema(node.child))
+            i32 = jnp.dtype(jnp.int32)
+            f32 = jnp.dtype(jnp.float32)
+            for fn, col, off in node.funcs:
+                name = A.window_output_name(fn, col, off)
+                if col is None:  # rank / dense_rank / row_number
+                    sds = jax.ShapeDtypeStruct((), i32)
+                elif fn == "running_mean":
+                    sds = jax.ShapeDtypeStruct((), f32)
+                else:  # lag / lead / cumsum / cummax keep the input dtype
+                    sds = out[col]
+                out[name] = sds
             return out
         # Select / Limit / Sort / Distinct / Repartition / set ops: unchanged
         return dict(self.schema(children(node)[0]))
@@ -440,11 +478,19 @@ def _pushdown_projections(node: Node, needed: set[str] | None,
     if isinstance(node, Limit):
         return replace(node, child=_pushdown_projections(node.child, needed,
                                                          an))
-    if isinstance(node, (Sort, Repartition)):
-        keys = set(node.by if isinstance(node, Sort) else node.keys)
+    if isinstance(node, (Sort, Repartition, Window)):
+        if isinstance(node, Sort):
+            keys = set(node.by)
+        elif isinstance(node, Repartition):
+            keys = set(node.keys)
+        else:  # Window: partition keys + order keys + function inputs
+            keys = set(node.by) | set(node.order_by) \
+                | {c for _, c, _ in node.funcs if c is not None}
         cn = None if needed is None else needed | keys
         child = _pushdown_projections(node.child, cn, an)
         if cn is not None:
+            # window OUTPUT names in `cn` are not child columns: the
+            # intersection with the child schema drops them
             child = _project_to(child, cn & set(an.schema(child)) | keys, an)
         return replace(node, child=child)
     if isinstance(node, Join):
@@ -596,6 +642,21 @@ def _elide(node: Node, p: int, an: _Analysis
         # the shuffle (or the single-shard identity) leaves the output
         # range-partitioned on `by`; fingerprint = the producing subtree
         return out, RangePartitioning(node.by, p, _range_fp(out))
+    if isinstance(node, Window):
+        c, cp = _elide(node.child, p, an)
+        keys = node.by + node.order_by
+        # same placement rules as Sort: a range partitioning on a prefix
+        # of (by + order_by) — or an extension of it — already gives every
+        # shard a contiguous slice of the target global order, so the
+        # window pays only its boundary all_gather; the input's placement
+        # tag survives (windows are row- and placement-preserving)
+        el = range_prefix_matches(cp, keys) or (
+            isinstance(cp, RangePartitioning)
+            and keys == cp.keys[:len(keys)])
+        if el:
+            return replace(node, child=c, skip_shuffle=True), cp
+        out = replace(node, child=c, skip_shuffle=p == 1)
+        return out, RangePartitioning(keys, p, _range_fp(out))
     if isinstance(node, SetOp):
         l, lp = _elide(node.left, p, an)
         r, rp = _elide(node.right, p, an)
@@ -675,8 +736,10 @@ class _Estimator:
             cs = kids[0]
             return None if cs is None else S.cap_rows(
                 cs, min(float(node.n), cs.rows))
-        if isinstance(node, (Sort, Repartition)):
+        if isinstance(node, (Sort, Repartition, Window)):
             # row- and key-preserving; only the shard placement changes
+            # (a Window appends result columns, which simply carry no
+            # column statistics — they never drive placement)
             cs = kids[0]
             return None if cs is None else S.cap_rows(cs, cs.rows)
         if isinstance(node, GroupBy):
@@ -775,7 +838,7 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
             sized = True
         return replace(node, child=kids[0], bucket_capacity=bucket,
                        sized=sized)
-    if isinstance(node, Sort):
+    if isinstance(node, (Sort, Window)):
         cs = est.stats(node.child)
         bucket, sized = node.bucket_capacity, node.sized
         if (bucket is None and cs is not None and p > 1
@@ -875,7 +938,8 @@ def _stats_arity(node: Node) -> int:
     """How many ShuffleStats entries ``execute_plan`` emits for ``node``."""
     if isinstance(node, (Join, SetOp)):
         return 2
-    if isinstance(node, (Limit, Repartition, GroupBy, Sort, Distinct)):
+    if isinstance(node, (Limit, Repartition, GroupBy, Sort, Window,
+                         Distinct)):
         return 1
     return 0
 
@@ -1107,6 +1171,20 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                 skip_shuffle=node.skip_shuffle, report=report)
             stats.extend(st)
             return out
+        if isinstance(node, Window):
+            t = run(node.child)
+            out, st = D.dist_window(
+                t, list(node.by), node.funcs, axis_name=axis_name,
+                order_by=list(node.order_by),
+                # range partition by sampled splitters, like Sort: the
+                # no-stats bucket widens by the documented sort factor
+                bucket_capacity=cap(t, node.bucket_capacity,
+                                    slack=S.FALLBACK_SLACK
+                                    * S.SORT_SLACK_FACTOR),
+                samples_per_shard=node.samples_per_shard,
+                skip_shuffle=node.skip_shuffle, report=report)
+            stats.extend(st)
+            return out
         if isinstance(node, SetOp):
             a, b = run(node.left), run(node.right)
             cb = node.bucket_capacity or max(cap(a, None), cap(b, None))
@@ -1212,6 +1290,12 @@ def explain(plan: Node, input_schemas: Sequence[dict] | None = None,
                    f"shuffle={_shuffle_word(node.skip_shuffle)}")
         elif isinstance(node, Sort):
             txt = (f"Sort(by={node.by}, "
+                   f"shuffle={_shuffle_word(node.skip_shuffle)}")
+        elif isinstance(node, Window):
+            fn_names = tuple(A.window_output_name(fn, col, off)
+                             for fn, col, off in node.funcs)
+            txt = (f"Window(by={node.by}, order_by={node.order_by}, "
+                   f"funcs={fn_names}, "
                    f"shuffle={_shuffle_word(node.skip_shuffle)}")
         elif isinstance(node, SetOp):
             extra = f", mode={node.mode}" if isinstance(node, Difference) \

@@ -16,6 +16,7 @@ from repro.kernels.bitonic import DEFAULT_TILE, bitonic_sort_tiles
 from repro.kernels.hash64 import hash32
 from repro.kernels.histogram import bucket_histogram
 from repro.kernels.segment_reduce import MAX_SEGMENTS, segment_reduce_tiles
+from repro.kernels.segment_scan import segment_scan_tiles
 from repro.utils import interpret_mode, next_pow2
 
 __all__ = [
@@ -24,6 +25,7 @@ __all__ = [
     "bucket_histogram",
     "sort_pairs",
     "segment_reduce",
+    "segment_scan",
     "key_max",
 ]
 
@@ -97,6 +99,47 @@ def segment_reduce(
     at = out.at[idx]
     scatter = {"sum": at.add, "min": at.min, "max": at.max}[op]
     return scatter(values, mode="drop")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "inclusive", "use_kernel"))
+def segment_scan(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    op: str = "sum",
+    *,
+    inclusive: bool = True,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Segmented running sum/min/max along the row axis (window hot path).
+
+    ``out[i] = op(values[j] for j <= i with seg_ids[j] == seg_ids[i])``
+    (strict ``j < i`` when ``inclusive=False``; rows without an in-segment
+    predecessor hold the op identity). seg_ids: (n,) int32 contiguous runs
+    — the sorted-segment layout ``core/ops_agg`` produces — with trailing
+    -1 padding allowed.
+
+    The Pallas kernel (kernels/segment_scan.py) handles 1-D f32/i32
+    values; ``use_kernel=False`` forces the XLA ``associative_scan``
+    oracle (bit-identical on integer-valued inputs). Auto prefers the
+    kernel only where it actually runs AS a kernel: under interpret mode
+    (no TPU — tests, CPU CI) the emulated per-block triangular mask is
+    far slower than XLA's native scan.
+    """
+    assert op in ("sum", "min", "max"), op
+    assert seg_ids.ndim == 1 and values.shape == seg_ids.shape, (
+        values.shape, seg_ids.shape)
+    shape_ok = values.ndim == 1 and values.dtype in (jnp.float32, jnp.int32)
+    if use_kernel is None:
+        use_kernel = shape_ok and not interpret_mode()
+    elif use_kernel and not shape_ok:
+        raise ValueError(
+            f"segment_scan kernel needs 1-D f32/i32 values; got "
+            f"shape={values.shape} dtype={values.dtype}. Use "
+            f"use_kernel=None for the XLA fallback.")
+    if use_kernel:
+        return segment_scan_tiles(values, seg_ids, op, inclusive=inclusive)
+    return ref.segment_scan_ref(values, seg_ids, op, inclusive)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "use_kernel"))

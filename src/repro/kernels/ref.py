@@ -118,6 +118,38 @@ def segment_reduce_ref(values: jax.Array, seg_ids: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# segmented prefix scan
+# ---------------------------------------------------------------------------
+
+_SCAN_OPS = {"sum": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+
+
+def segment_scan_ref(values: jax.Array, seg_ids: jax.Array,
+                     op: str = "sum", inclusive: bool = True) -> jax.Array:
+    """Segmented running sum/min/max over contiguous segment runs.
+
+    ``out[i] = op(values[j] for j <= i with seg_ids[j] == seg_ids[i])``
+    (strict ``j < i`` when ``inclusive=False``, identity when a row has no
+    in-segment predecessor). seg_ids must form contiguous runs (sorted;
+    trailing -1 padding allowed) — the (segment, value) pair combinator is
+    associative only under that contract. Oracle: jax.lax.associative_scan.
+    """
+    f = _SCAN_OPS[op]
+
+    def combine(a, b):
+        sa, va = a
+        sb, vb = b
+        return sb, jnp.where(sa == sb, f(va, vb), vb)
+
+    _, incl = jax.lax.associative_scan(combine, (seg_ids, values))
+    if inclusive:
+        return incl
+    init = seg_init(op, values.dtype)
+    same_prev = (seg_ids == jnp.roll(seg_ids, 1)).at[0].set(False)
+    return jnp.where(same_prev, jnp.roll(incl, 1), init)
+
+
+# ---------------------------------------------------------------------------
 # bucket histogram
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: segmented prefix scan — the window-function hot path.
+
+Window functions (core/ops_agg.window) reduce to *segment scans* over the
+sorted frame: after sort-by-(keys, order) + boundary detection, ``rank`` is
+a segmented running max, ``dense_rank``/``cumsum``/``running_mean`` are
+segmented running sums, ``cummax`` a running max — all over contiguous
+per-group runs of rows.
+
+The kernel formulation mirrors kernels/segment_reduce.py's one-hot idiom,
+tiled along the segment-sorted row axis: the grid walks row blocks in
+order, and each block materializes the (BLOCK, BLOCK) *triangular same-
+segment* mask — ``mask[i, j] = (j < i) & (seg[j] == seg[i])`` — so the
+exclusive scan of a block is one masked reduction over the j axis (an MXU
+matmul for f32 sums, a VPU min/max otherwise). TPU grid steps execute
+sequentially and output blocks with a constant index map stay VMEM-
+resident, so the cross-block carry (the running value and segment id at
+the previous block's last row) lives in two (1, 1) output refs revisited
+by every step — the same persistence contract segment_reduce relies on
+for its output tiles.
+
+Requirements: segment ids form contiguous runs (non-decreasing, as
+produced by sort + cumsum-of-boundaries), with -1 allowed as trailing
+padding. ``ref.segment_scan_ref`` (jax.lax.associative_scan over
+(segment, value) pairs) is the bit-exact oracle under integer or
+integer-valued-float inputs; kernels/ops.py routes ``use_kernel=False``
+(and CPU interpret mode, where the emulated triangular mask is far slower
+than XLA's scan) to it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.utils import interpret_mode, round_up
+
+LANES = 128
+BLOCK_ROWS = 8
+#: rows per grid step — the (BLOCK, BLOCK) triangular mask is the VMEM
+#: budget (1 MiB of bool + a 4 MiB f32 one-hot on the matmul path), the
+#: same block budget segment_reduce spends on its one-hot.
+BLOCK = BLOCK_ROWS * LANES  # 1024
+
+OPS = ("sum", "min", "max")
+
+
+def _scan_kernel(seg_ref, val_ref, o_ref, cval_ref, cseg_ref, *,
+                 op: str, inclusive: bool):
+    step = pl.program_id(0)
+    init = ref.seg_init(op, o_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        cval_ref[...] = jnp.full_like(cval_ref, init)
+        # -2 matches no real segment id (>= 0) and no -1 padding
+        cseg_ref[...] = jnp.full_like(cseg_ref, -2)
+
+    seg = seg_ref[...].reshape(-1)  # (BLOCK,)
+    val = val_ref[...].reshape(-1)
+    n = seg.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    # strict triangle: row i's EXCLUSIVE prefix within its segment run
+    mask = (jj < ii) & (seg[None, :] == seg[:, None])
+    if op == "sum" and val.dtype == jnp.float32:
+        # MXU path: (n, n) @ (n, 1)
+        excl = jnp.dot(mask.astype(jnp.float32), val[:, None],
+                       preferred_element_type=jnp.float32).reshape(-1)
+    elif op == "sum":
+        excl = jnp.sum(jnp.where(mask, val[None, :], jnp.zeros_like(init)),
+                       axis=1)
+    elif op == "min":
+        excl = jnp.min(jnp.where(mask, val[None, :], init), axis=1)
+    else:  # max
+        excl = jnp.max(jnp.where(mask, val[None, :], init), axis=1)
+
+    # fold the previous blocks' carry into rows continuing its segment
+    cont = seg == cseg_ref[0, 0]
+    carry = jnp.where(cont, cval_ref[0, 0], init)
+    if op == "sum":
+        excl = excl + carry
+        incl = excl + val
+    elif op == "min":
+        excl = jnp.minimum(excl, carry)
+        incl = jnp.minimum(excl, val)
+    else:
+        excl = jnp.maximum(excl, carry)
+        incl = jnp.maximum(excl, val)
+
+    out = incl if inclusive else excl
+    o_ref[...] = out.reshape(o_ref.shape)
+    cval_ref[0, 0] = incl[n - 1]
+    cseg_ref[0, 0] = seg[n - 1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "inclusive", "interpret"))
+def segment_scan_tiles(
+    values: jax.Array,
+    seg_ids: jax.Array,
+    op: str = "sum",
+    *,
+    inclusive: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Segmented running sum/min/max of 1-D ``values`` along the row axis.
+
+    ``out[i] = op(values[j] for j <= i with seg_ids[j] == seg_ids[i])``
+    (``j < i`` when ``inclusive=False``; rows with no in-segment
+    predecessor hold the op identity). seg_ids: (n,) int32 contiguous
+    runs — non-decreasing, -1 trailing padding allowed. Matches
+    ``ref.segment_scan_ref`` exactly on integer-valued inputs.
+    """
+    assert op in OPS, op
+    assert values.ndim == 1 and values.shape == seg_ids.shape, (
+        values.shape, seg_ids.shape)
+    if interpret is None:
+        interpret = interpret_mode()
+    (n,) = values.shape
+    n_pad = max(round_up(n, BLOCK), BLOCK)
+    segp = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(
+        seg_ids.astype(jnp.int32)).reshape(n_pad // LANES, LANES)
+    valp = jnp.zeros((n_pad,), values.dtype).at[:n].set(values) \
+        .reshape(n_pad // LANES, LANES)
+    grid = (n_pad // BLOCK,)
+    out, _, _ = pl.pallas_call(
+        functools.partial(_scan_kernel, op=op, inclusive=inclusive),
+        out_shape=[jax.ShapeDtypeStruct((n_pad // LANES, LANES),
+                                        values.dtype),
+                   jax.ShapeDtypeStruct((1, 1), values.dtype),  # carry val
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],    # carry seg
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda s: (s, 0)),
+                  pl.BlockSpec((BLOCK_ROWS, LANES), lambda s: (s, 0))],
+        out_specs=[pl.BlockSpec((BLOCK_ROWS, LANES), lambda s: (s, 0)),
+                   pl.BlockSpec((1, 1), lambda s: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda s: (0, 0))],
+        interpret=interpret,
+    )(segp, valp)
+    return out.reshape(n_pad)[:n]

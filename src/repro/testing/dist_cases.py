@@ -414,6 +414,133 @@ def case_cost_groupby():
     return out
 
 
+def case_window_chain():
+    """Window functions over a sorted frame: the fused sort -> window ->
+    select chain must run the window with ZERO AllToAlls (the sort's range
+    placement satisfies it; cross-shard group carries ride a p-sized
+    boundary all_gather), stay bit-identical to the single-host oracle
+    for all 8 window functions, and strictly undercut the naive lowering
+    (window pays its own range shuffle) on wire bytes."""
+    from repro.core import ops_agg as A
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    rng = np.random.default_rng(31)
+    n_per = 300
+    n = p * n_per
+    # FEW groups so nearly every group spans several shards (the carry
+    # fold does real work); unique order values keep every function —
+    # including cumsum/lag — deterministic, hence bit-comparable
+    k = rng.integers(0, 5, n).astype(np.int32)
+    o = rng.permutation(n).astype(np.int32)
+    d0 = rng.integers(-30, 30, n).astype(np.float32)
+    parts = [Table.from_arrays({
+        "k": k[i * n_per:(i + 1) * n_per],
+        "o": o[i * n_per:(i + 1) * n_per],
+        "d0": d0[i * n_per:(i + 1) * n_per]}) for i in range(p)]
+    dt = ctx.from_local_parts(parts)
+    funcs = ["rank", "dense_rank", "row_number", ("lag", "d0"),
+             ("lead", "d0"), ("cumsum", "d0"), ("cummax", "d0"),
+             ("running_mean", "d0")]
+    pairs = A.normalize_funcs(funcs)
+
+    # single-host oracle (pure numpy, tests/oracle.py semantics inlined
+    # via the local operator, itself oracle-verified in tests/test_window)
+    local = A.window(Table.from_arrays({"k": k, "o": o, "d0": d0}), "k",
+                     funcs, order_by="o").to_numpy()
+
+    # naive lowering: the window node pays its own range partition
+    naive = ctx.frame(dt).window("k", funcs, order_by="o")
+    nrep = naive.plan_report()
+    n_out, n_stats = naive.collect_with_stats()
+    got_naive = n_out.to_table().to_numpy()
+
+    # pre-sorted lowering: fused sort -> window -> select
+    fused = (ctx.frame(dt).sort(["k", "o"]).window("k", funcs, order_by="o")
+             .select(lambda c: c["rank"] <= 9, key="top9"))
+    frep = fused.plan_report()
+    f_out, f_stats = fused.collect_with_stats()
+    got = f_out.to_table().to_numpy()
+
+    ok = True
+    for name in local:
+        ok &= bool(np.array_equal(got_naive[name], local[name]))
+    sel = local["rank"] <= 9
+    for name in local:
+        ok &= bool(np.array_equal(got[name], local[name][sel]))
+
+    win_rep = [r for r in frep if r["op"] == "window"]
+    return {
+        "identical": ok,
+        "rows": int(f_out.global_rows()),
+        "rows_expect": int(sel.sum()),
+        "naive_overflow": sum(int(np.asarray(s.overflow).sum())
+                              for s in n_stats),
+        "fused_overflow": sum(int(np.asarray(s.overflow).sum())
+                              for s in f_stats),
+        "window_elided": len(win_rep) == 1 and win_rep[0]["elided"]
+        and win_rep[0]["wire_bytes"] == 0,
+        "naive_window_alltoall": sum(not r["elided"] for r in nrep),
+        "fused_alltoall": sum(not r["elided"] for r in frep),
+        "naive_wire": sum(r["wire_bytes"] for r in nrep),
+        "fused_window_wire": sum(r["wire_bytes"] for r in frep
+                                 if r["op"] == "window"),
+    }
+
+
+def case_window_thin_shards():
+    """Adversarial carry stitching: a group split across shards whose
+    per-shard portions are SMALLER than the lag/lead offset (the boundary
+    buffers must merge across several shards), plus an empty middle shard.
+    The input is hand-tagged range-partitioned so the crafted placement is
+    preserved (shuffle elided) — the carry fold sees exactly these cuts."""
+    import dataclasses
+
+    from repro.core import ops_agg as A
+    from repro.core.repartition import (RangePartitioning,
+                                        fresh_range_fingerprint)
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    sizes = [6, 1, 2, 0, 1, 6, 1, 3]
+    group = [0, 0, 0, 0, 0, 0, 1, 1]  # group id per shard (contiguous)
+    assert p == len(sizes), (p, len(sizes))  # the cuts are crafted for 8
+    n = sum(sizes)
+    cap = 8
+    o_all = np.arange(n, dtype=np.int32)
+    d_all = (np.arange(n, dtype=np.int32) * 3 - 7).astype(np.float32)
+    k_all = np.concatenate([np.full(s, g, np.int32)
+                            for s, g in zip(sizes, group)])
+    parts, off = [], 0
+    for i in range(p):
+        s = sizes[i]
+        parts.append(Table.from_arrays(
+            {"k": np.pad(k_all[off:off + s], (0, cap - s)),
+             "o": np.pad(o_all[off:off + s], (0, cap - s)),
+             "d0": np.pad(d_all[off:off + s], (0, cap - s))},
+            row_count=s))
+        off += s
+    dt = dataclasses.replace(
+        ctx.from_local_parts(parts),
+        partitioning=RangePartitioning(("k", "o"), p,
+                                       fresh_range_fingerprint()))
+    funcs = ["rank", "dense_rank", "row_number", ("lag", "d0", 4),
+             ("lead", "d0", 4), ("cumsum", "d0"), ("cummax", "d0"),
+             ("running_mean", "d0")]
+    fr = ctx.frame(dt).window("k", funcs, order_by="o")
+    rep = fr.plan_report()
+    got = fr.collect().to_table().to_numpy()
+    local = A.window(Table.from_arrays(
+        {"k": k_all, "o": o_all, "d0": d_all}), "k", funcs,
+        order_by="o").to_numpy()
+    ok = all(bool(np.array_equal(got[name], local[name])) for name in local)
+    return {"identical": ok, "rows": int(len(got["k"])), "rows_expect": n,
+            "window_elided": all(r["elided"] for r in rep
+                                 if r["op"] == "window")}
+
+
 def case_sort_multikey():
     """Multi-key distributed sort: global lexicographic order across shards,
     row multiset preserved."""

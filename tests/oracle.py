@@ -134,6 +134,67 @@ def groupby_oracle(table, keys, aggs):
     return {k: np.asarray(v) for k, v in out.items()}
 
 
+def window_oracle(table, by, order_by, funcs):
+    """Window-function ground truth, plain-Python row semantics.
+
+    table: dict col -> 1-D np.ndarray; by/order_by: lists of column names;
+    funcs: normalized [(fn, col, offset), ...] (ops_agg.normalize_funcs).
+    Returns dict col -> np.ndarray holding the input rows STABLY sorted by
+    (by + order_by) — the order repro's window emits — plus one result
+    column per function (ops_agg.window_output_name). rank/dense_rank tie
+    on the full (by + order_by) tuple; lag/lead fill 0 outside the group;
+    running_mean is float32 of the float32 running sum (matching the JAX
+    arithmetic bit-for-bit on integer-valued inputs).
+    """
+    names = sorted(table)
+    n = len(np.asarray(table[names[0]])) if names else 0
+    keys = lambda i: tuple(np.asarray(table[k])[i].item()
+                           for k in by + order_by)
+    order = sorted(range(n), key=lambda i: (keys(i), i))  # stable
+    out = {k: np.asarray(table[k])[order] for k in names}
+
+    groups: dict[tuple, list[int]] = {}
+    for pos, i in enumerate(order):
+        gk = tuple(np.asarray(table[k])[i].item() for k in by)
+        groups.setdefault(gk, []).append(pos)
+
+    from repro.core.ops_agg import window_output_name
+
+    res: dict[str, list] = {}
+    for fn, col, off in funcs:
+        res[window_output_name(fn, col, off)] = np.zeros(
+            (n,), np.int32 if col is None else (
+                np.float32 if fn == "running_mean"
+                else out[col].dtype))
+    for gk, members in groups.items():  # members: positions, sorted order
+        ordv = [tuple(out[k][p].item() for k in order_by) for p in members]
+        for j, p in enumerate(members):
+            for fn, col, off in funcs:
+                name = window_output_name(fn, col, off)
+                if fn == "row_number":
+                    res[name][p] = j + 1
+                elif fn == "rank":
+                    res[name][p] = ordv.index(ordv[j]) + 1
+                elif fn == "dense_rank":
+                    res[name][p] = len(set(ordv[: j + 1]))
+                elif fn == "lag":
+                    res[name][p] = out[col][members[j - off]] \
+                        if j - off >= 0 else 0
+                elif fn == "lead":
+                    res[name][p] = out[col][members[j + off]] \
+                        if j + off < len(members) else 0
+                elif fn == "cumsum":
+                    res[name][p] = out[col][members[: j + 1]].sum()
+                elif fn == "cummax":
+                    res[name][p] = out[col][members[: j + 1]].max()
+                elif fn == "running_mean":
+                    s = np.float32(0)
+                    for q in members[: j + 1]:
+                        s = np.float32(s + np.float32(out[col][q]))
+                    res[name][p] = s / np.float32(j + 1)
+    return {**out, **{k: np.asarray(v) for k, v in res.items()}}
+
+
 def table_rows_sorted(t):
     """Valid rows of a repro Table as sorted tuples (cols sorted by name)."""
     d = t.to_numpy()

@@ -125,6 +125,33 @@ def test_cost_model_groupby_strategy_and_wire():
         assert r[end]["cost_wire"] < r[end]["base_wire"], (end, r)
 
 
+def test_window_chain_elides_shuffle_and_matches_oracle():
+    """The window-subsystem contract: over a dist_sort output the window
+    runs with 0 AllToAlls (boundary all_gather only) and is bit-identical
+    to the single-host oracle for all 8 functions; the unsorted lowering
+    (sort inside the window node) pays one shuffle and stays
+    bit-identical too."""
+    r = run_case("window_chain")
+    assert r["identical"], r
+    assert r["window_elided"], r
+    assert r["fused_alltoall"] == 1, r  # only the sort's range partition
+    assert r["naive_window_alltoall"] == 1, r
+    assert r["fused_window_wire"] == 0, r
+    assert r["naive_wire"] > 0, r
+    assert r["naive_overflow"] == 0 and r["fused_overflow"] == 0, r
+    assert r["rows"] == r["rows_expect"], r
+
+
+def test_window_thin_shard_carries_match_oracle():
+    """Group portions smaller than the lag/lead offset and an empty
+    middle shard: the boundary buffers must merge across several shards
+    and still match the single-host oracle bit-for-bit."""
+    r = run_case("window_thin_shards")
+    assert r["identical"], r
+    assert r["window_elided"], r
+    assert r["rows"] == r["rows_expect"], r
+
+
 def test_dist_sort_multikey():
     r = run_case("sort_multikey")
     assert r["order_ok"] and r["multiset_ok"], r

@@ -108,6 +108,77 @@ def test_segment_reduce_tiled_values_land_in_correct_tile():
     np.testing.assert_array_equal(out, expect)
 
 
+# --- segment scan: carry across the row-block (1024) boundary -------------------
+
+
+@pytest.mark.parametrize("n", [
+    1,        # single row
+    1023,     # one row short of a block
+    1024,     # exactly one block
+    1025,     # first carried case: 2 blocks, segment spans the edge
+    3000,     # ragged multi-block
+])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+@pytest.mark.parametrize("inclusive", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_segment_scan_block_boundary_sweep(n, op, inclusive, dtype):
+    from repro.kernels.segment_scan import BLOCK, segment_scan_tiles
+    assert BLOCK == 1024  # the sweep brackets this boundary
+    # contiguous non-decreasing runs, ids sparse (skipped ids = empty
+    # segments), run lengths down to 1 (single-row segments)
+    seg = np.sort(RNG.integers(0, max(1, n // 2), n) * 3).astype(np.int32)
+    vals = jnp.asarray(RNG.integers(-40, 40, n), dtype)
+    segj = jnp.asarray(seg)
+    want = np.asarray(ref.segment_scan_ref(vals, segj, op, inclusive))
+    got = np.asarray(segment_scan_tiles(vals, segj, op, inclusive=inclusive))
+    np.testing.assert_array_equal(got, want)
+    # the public wrapper: forced kernel and forced oracle both match
+    via_ops = np.asarray(kops.segment_scan(vals, segj, op,
+                                           inclusive=inclusive,
+                                           use_kernel=True))
+    fallback = np.asarray(kops.segment_scan(vals, segj, op,
+                                            inclusive=inclusive,
+                                            use_kernel=False))
+    np.testing.assert_array_equal(via_ops, want)
+    np.testing.assert_array_equal(fallback, want)
+
+
+def test_segment_scan_single_segment_spans_blocks():
+    # ONE segment over 3 blocks: any carry bug accumulates visibly
+    from repro.kernels.segment_scan import BLOCK, segment_scan_tiles
+    n = 3 * BLOCK
+    vals = jnp.ones((n,), jnp.int32)
+    seg = jnp.zeros((n,), jnp.int32)
+    got = np.asarray(segment_scan_tiles(vals, seg, "sum"))
+    np.testing.assert_array_equal(got, np.arange(1, n + 1))
+    excl = np.asarray(segment_scan_tiles(vals, seg, "sum", inclusive=False))
+    np.testing.assert_array_equal(excl, np.arange(n))
+
+
+def test_segment_scan_boundary_straddling_runs():
+    # segments chosen to cut exactly AT the block edges (1024±1): a new
+    # segment beginning at the first row of a block must ignore the carry
+    from repro.kernels.segment_scan import BLOCK, segment_scan_tiles
+    n = 2 * BLOCK + 2
+    edges = [0, BLOCK - 1, BLOCK, BLOCK + 1, 2 * BLOCK, n]
+    seg = np.zeros((n,), np.int32)
+    for s_id, (lo, hi) in enumerate(zip(edges, edges[1:])):
+        seg[lo:hi] = s_id
+    vals = jnp.asarray(RNG.integers(-9, 9, n), jnp.int32)
+    segj = jnp.asarray(seg)
+    for op in ("sum", "min", "max"):
+        want = np.asarray(ref.segment_scan_ref(vals, segj, op, True))
+        got = np.asarray(segment_scan_tiles(vals, segj, op))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_segment_scan_rejects_bad_shapes():
+    vals = jnp.zeros((8, 2), jnp.float32)
+    seg = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(Exception):
+        kops.segment_scan(vals, seg, "sum", use_kernel=True)
+
+
 # --- bitonic sort ---------------------------------------------------------------
 
 

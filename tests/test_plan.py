@@ -699,3 +699,152 @@ def test_table_empty_nd_schema():
     assert t.columns["tokens"].dtype == jnp.int32
     assert t.columns["emb"].shape == (8, 4, 2)
     assert int(t.row_count) == 0
+
+
+# --- window functions: golden plan shapes + fused execution -------------------
+
+
+WFUNCS = (("rank", None, 0), ("cumsum", "d0", 0), ("lag", "d0", 1))
+
+
+def test_window_schema_appends_result_columns():
+    plan = PL.Window(PL.Scan(0), ("k",), ("d1",), WFUNCS)
+    an = PL._Analysis([ORDERS])
+    sch = an.schema(plan)
+    assert set(sch) == {"k", "d0", "d1", "rank", "d0_cumsum", "d0_lag"}
+    assert sch["rank"].dtype == I32
+    assert sch["d0_cumsum"].dtype == F32  # input dtype preserved
+    assert sch["d0_lag"].dtype == F32
+
+
+def test_window_elides_shuffle_after_matching_sort():
+    # sort on (k, d1) -> window by k order d1: exact key match, elided
+    plan = PL.Window(PL.Sort(PL.Scan(0), ("k", "d1")), ("k",), ("d1",),
+                     WFUNCS)
+    opt = PL.optimize(plan, [ORDERS], 8)
+    assert opt.skip_shuffle, PL.explain(opt)
+    # sort on the PARTITION prefix alone also elides (placement is a
+    # function of a prefix of the window keys)
+    plan = PL.Window(PL.Sort(PL.Scan(0), ("k",)), ("k",), ("d1",), WFUNCS)
+    assert PL.optimize(plan, [ORDERS], 8).skip_shuffle
+    # a range-partitioned Scan (a materialized sort output) elides too
+    part = RangePartitioning(("k", "d1"), 8, ("table", 3))
+    plan = PL.Window(PL.Scan(0, partitioning=part), ("k",), ("d1",), WFUNCS)
+    assert PL.optimize(plan, [ORDERS], 8).skip_shuffle
+    # different leading key: must NOT elide
+    plan = PL.Window(PL.Sort(PL.Scan(0), ("d0",)), ("k",), ("d1",), WFUNCS)
+    assert not PL.optimize(plan, [ORDERS], 8).skip_shuffle
+
+
+def test_window_placement_tag_elides_downstream_ops():
+    # windows are row/placement-preserving: the range tag survives, so a
+    # downstream groupby on the partition key elides its shuffle
+    plan = PL.GroupBy(PL.Window(PL.Sort(PL.Scan(0), ("k",)), ("k",), (),
+                                WFUNCS),
+                      ("k",), (("d0", "sum"),))
+    opt = PL.optimize(plan, [ORDERS], 8)
+    assert opt.skip_shuffle, PL.explain(opt)
+    gb_children = find(opt, PL.Window)
+    assert gb_children and gb_children[0].skip_shuffle
+    # placement on (k, d1) does NOT satisfy a groupby on k alone — a k
+    # group can span shards with different d1 — so no elision there
+    plan = PL.GroupBy(PL.Window(PL.Sort(PL.Scan(0), ("k", "d1")), ("k",),
+                                ("d1",), WFUNCS),
+                      ("k",), (("d0", "sum"),))
+    assert not PL.optimize(plan, [ORDERS], 8).skip_shuffle
+    # an UNSORTED window leaves its own range placement behind, which a
+    # downstream sort on the same keys can reuse
+    plan = PL.Sort(PL.Window(PL.Scan(0), ("k",), ("d1",), WFUNCS),
+                   ("k", "d1"))
+    opt = PL.optimize(plan, [ORDERS], 8)
+    assert opt.skip_shuffle and not find(opt, PL.Window)[0].skip_shuffle
+
+
+def test_window_projection_pushdown_keeps_func_inputs():
+    # only d0_cumsum is consumed above: d1 is a window ORDER key and must
+    # survive; unused payload columns below the window are dropped
+    wide = {"k": jax.ShapeDtypeStruct((), I32),
+            "d0": jax.ShapeDtypeStruct((), F32),
+            "d1": jax.ShapeDtypeStruct((), F32),
+            "junk": jax.ShapeDtypeStruct((), F32)}
+    plan = PL.Project(PL.Window(PL.Scan(0), ("k",), ("d1",),
+                                (("cumsum", "d0", 0),)),
+                      ("k", "d0_cumsum"))
+    opt = PL.optimize(plan, [wide], 8)
+    projects = find(opt, PL.Project)
+    below = [p for p in projects if isinstance(p.child, PL.Scan)]
+    assert below and set(below[0].columns) == {"k", "d0", "d1"}, \
+        PL.explain(opt)
+
+
+def test_window_cost_sizing_mirrors_sort():
+    plan = PL.Window(PL.Scan(0), ("k",), (), WFUNCS)
+    o = PL.optimize(plan, [ORDERS], 8, [HI_STATS])
+    assert o.sized
+    assert o.bucket_capacity == S.size_bucket(
+        8000.0 / 8, 8, factor=S.RANGE_SIZING_FACTOR)
+    # row-preserving: estimates propagate unchanged through the window
+    gb = PL.GroupBy(plan, ("k",), (("d0", "sum"),))
+    est = PL._Estimator(PL._Analysis([ORDERS]), [HI_STATS])
+    assert est.stats(gb.child).rows == 8000.0
+    # elided window is never sized (no shuffle to size)
+    plan = PL.Window(PL.Sort(PL.Scan(0), ("k",)), ("k",), (), WFUNCS)
+    o = PL.optimize(plan, [ORDERS], 8, [HI_STATS])
+    assert o.skip_shuffle and not o.sized and o.bucket_capacity is None
+
+
+def test_window_canonical_key_and_stats_mask():
+    mk = lambda: PL.Window(PL.Scan(0), ("k",), ("d1",), WFUNCS)
+    assert PL.canonical_key(mk()) == PL.canonical_key(mk())
+    assert PL.canonical_key(mk()) != PL.canonical_key(
+        PL.Window(PL.Scan(0), ("k",), ("d1",), (("rank", None, 0),)))
+    # one ShuffleStats entry per window, mirrored in the cost-sized mask
+    plan = PL.Window(PL.Sort(PL.Scan(0), ("k",)), ("k",), (), WFUNCS)
+    assert PL._stats_arity(plan) == 1
+    assert len(PL.cost_sized_stats_mask(plan)) == 2  # sort + window
+
+
+def test_select_not_pushed_below_window():
+    # filtering before a window changes ranks/sums: the Select must stay
+    # pinned above even when it only reads pass-through columns
+    plan = PL.Select(PL.Window(PL.Scan(0), ("k",), ("d1",), WFUNCS),
+                     lambda c: c["d0"] > 0.0, key="p")
+    opt = PL.optimize(plan, [ORDERS], 8)
+    assert isinstance(opt, PL.Select), PL.explain(opt)
+    assert isinstance(opt.child, PL.Window)
+
+
+def test_lazy_window_matches_local_oracle(ctx):
+    from oracle import window_oracle
+    from repro.core import ops_agg as A
+
+    rng = np.random.default_rng(21)
+    n = 400
+    cols = {"k": rng.integers(0, 6, n).astype(np.int32),
+            "o": rng.permutation(n).astype(np.int32),
+            "d0": rng.integers(-30, 30, n).astype(np.float32)}
+    funcs = ["rank", "dense_rank", "row_number", ("lag", "d0"),
+             ("lead", "d0"), ("cumsum", "d0"), ("cummax", "d0"),
+             ("running_mean", "d0")]
+    dt = ctx.scatter(Table.from_arrays(cols))
+    out = (ctx.frame(dt).window("k", funcs, order_by="o")
+           .collect().to_table().to_numpy())
+    want = window_oracle(cols, ["k"], ["o"], A.normalize_funcs(funcs))
+    for name in want:
+        np.testing.assert_array_equal(out[name], want[name], err_msg=name)
+    # eager entry point: identical result, carries the range tag
+    eager, _ = ctx.window(dt, "k", funcs, order_by="o")
+    got = eager.to_table().to_numpy()
+    for name in want:
+        np.testing.assert_array_equal(got[name], want[name], err_msg=name)
+    assert isinstance(eager.partitioning, RangePartitioning)
+    assert eager.partitioning.keys == ("k", "o")
+
+
+def test_window_explain_lists_funcs(ctx):
+    dt = ctx.scatter(int_table(32, 4, seed=2))
+    txt = (ctx.frame(dt).sort(["k", "d0"])
+           .window("k", ["rank", ("cumsum", "d0")], order_by="d0")
+           .explain())
+    assert "Window(by=('k',), order_by=('d0',)" in txt
+    assert "'d0_cumsum'" in txt and "shuffle=elided" in txt, txt

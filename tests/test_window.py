@@ -1,0 +1,134 @@
+"""Local window functions vs the plain-Python oracle (tests/oracle.py).
+
+Example-based sweeps (no hypothesis — part of the minimal-env tier-1
+gate): every function, multi-column partition keys, tie handling, offset
+lags, empty/degenerate tables, and the kernel-vs-oracle scan routing.
+Integer-valued float payloads keep sums exact, so every comparison is
+bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from oracle import window_oracle
+from repro.core import ops_agg as A
+from repro.core.table import Table
+
+RNG = np.random.default_rng(42)
+
+ALL_FUNCS = ["rank", "dense_rank", "row_number",
+             ("lag", "d0"), ("lead", "d0"), ("lag", "d1", 3),
+             ("lead", "d1", 2), ("cumsum", "d0"), ("cumsum", "d1"),
+             ("cummax", "d1"), ("running_mean", "d0")]
+
+
+def _table(n, key_range, order_range=None, seed=0):
+    rng = np.random.default_rng(seed)
+    order = (rng.permutation(n).astype(np.int32) if order_range is None
+             else rng.integers(0, order_range, n).astype(np.int32))
+    return {"k": rng.integers(0, key_range, n).astype(np.int32),
+            "o": order,
+            "d0": rng.integers(-30, 30, n).astype(np.float32),
+            "d1": rng.integers(-9, 9, n).astype(np.int32)}
+
+
+def _check(cols, by, order_by, funcs):
+    pairs = A.normalize_funcs(funcs)
+    got = A.window(Table.from_arrays(cols), by, funcs,
+                   order_by=order_by).to_numpy()
+    want = window_oracle(cols, [by] if isinstance(by, str) else list(by),
+                        [order_by] if isinstance(order_by, str)
+                        else list(order_by), pairs)
+    assert set(got) == set(want)
+    for name in want:
+        np.testing.assert_array_equal(got[name], want[name], err_msg=name)
+
+
+@pytest.mark.parametrize("n,key_range", [(1, 1), (7, 3), (200, 10),
+                                         (500, 1), (300, 300)])
+def test_window_all_funcs_unique_order(n, key_range):
+    _check(_table(n, key_range, seed=n), "k", "o", ALL_FUNCS)
+
+
+def test_window_ties_share_rank():
+    # repeated (k, o) tuples: rank/dense_rank tie on the full tuple, and
+    # the stable sort keeps cumsum/lag deterministic vs the oracle
+    cols = _table(300, 4, order_range=5, seed=9)
+    _check(cols, "k", "o", ALL_FUNCS)
+
+
+def test_window_multikey_no_order():
+    rng = np.random.default_rng(3)
+    cols = {"a": rng.integers(0, 4, 250).astype(np.int32),
+            "b": rng.integers(0, 3, 250).astype(np.int32),
+            "d0": rng.integers(-20, 20, 250).astype(np.float32),
+            "d1": rng.integers(-5, 5, 250).astype(np.int32)}
+    funcs = ["rank", "dense_rank", "row_number", ("cumsum", "d0"),
+             ("lag", "d1")]
+    pairs = A.normalize_funcs(funcs)
+    got = A.window(Table.from_arrays(cols), ["a", "b"], funcs).to_numpy()
+    want = window_oracle(cols, ["a", "b"], [], pairs)
+    for name in want:
+        np.testing.assert_array_equal(got[name], want[name], err_msg=name)
+    # with no order columns every group is one value run
+    assert (got["rank"] == 1).all()
+    assert (got["dense_rank"] == 1).all()
+
+
+def test_window_empty_and_capacity_padding():
+    empty = Table.from_arrays({"k": np.zeros(0, np.int32),
+                               "d0": np.zeros(0, np.float32)})
+    out = A.window(empty, "k", [("cumsum", "d0"), "rank"])
+    assert int(out.row_count) == 0
+    # padded capacity: invalid rows must not leak into any output
+    cols = _table(40, 3, seed=1)
+    t = Table.from_arrays(cols, capacity=128)
+    got = A.window(t, "k", ALL_FUNCS, order_by="o").to_numpy()
+    want = window_oracle(cols, ["k"], ["o"], A.normalize_funcs(ALL_FUNCS))
+    for name in want:
+        np.testing.assert_array_equal(got[name], want[name], err_msg=name)
+
+
+def test_window_kernel_and_oracle_paths_agree():
+    cols = _table(400, 6, seed=8)
+    t = Table.from_arrays(cols)
+    funcs = ["rank", "dense_rank", ("cumsum", "d0"), ("cummax", "d1"),
+             ("running_mean", "d0")]
+    a = A.window(t, "k", funcs, order_by="o", use_kernel=True).to_numpy()
+    b = A.window(t, "k", funcs, order_by="o", use_kernel=False).to_numpy()
+    for name in a:
+        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+
+
+def test_normalize_funcs_canonical_and_validating():
+    pairs = A.normalize_funcs(["rank", ("lag", "d0"), ("lag", "d0", 2),
+                               ("cumsum", "d0")])
+    assert pairs == (("rank", None, 0), ("lag", "d0", 1), ("lag", "d0", 2),
+                     ("cumsum", "d0", 0))
+    assert A.window_output_name("lag", "d0", 1) == "d0_lag"
+    assert A.window_output_name("lag", "d0", 2) == "d0_lag2"
+    assert A.window_output_name("rank", None) == "rank"
+    with pytest.raises(AssertionError):
+        A.normalize_funcs(["median"])  # not a window function
+    with pytest.raises(AssertionError):
+        A.normalize_funcs([("rank", "d0")])  # rank takes no column
+    with pytest.raises(AssertionError):
+        A.normalize_funcs([("cumsum", None)])  # cumsum needs a column
+    with pytest.raises(AssertionError):
+        A.normalize_funcs([("lag", "d0", -1)])  # bad offset
+
+
+def test_window_output_collision_rejected():
+    t = Table.from_arrays({"k": np.zeros(4, np.int32),
+                           "rank": np.zeros(4, np.float32)})
+    with pytest.raises(AssertionError):
+        A.window(t, "k", ["rank"])
+
+
+def test_window_scan_funcs_reject_unsupported_dtype():
+    t = Table.from_arrays({"k": np.zeros(4, np.int32),
+                           "u": np.zeros(4, np.uint32)})
+    with pytest.raises(AssertionError):
+        A.window(t, "k", [("cumsum", "u")])
+    # lag/lead are gathers: any 1-D dtype is fine
+    out = A.window(t, "k", [("lag", "u")]).to_numpy()
+    assert out["u_lag"].dtype == np.uint32
