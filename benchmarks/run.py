@@ -1,6 +1,7 @@
 """Benchmark harness: one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+                                           [--sections A,B] [--skip A,B]
 
 Sections:
   Fig9/TableII engine comparison (bench_vs_baselines)
@@ -11,10 +12,12 @@ Sections:
   sort->join chains: range provenance vs re-shuffling (bench_sort_chain)
   cost-model planning: stats-driven strategy + sizing (bench_cost)
   window functions: boundary-carry elision vs re-shuffle (bench_window)
+  concurrent-query serving: cache warmth x dispatch mode (bench_serving)
   Fig7 weak scaling + Fig8 strong scaling (bench_scaling)
 
---json writes every section's tables as machine-readable records (the
-BENCH_*.json perf-trajectory feed).
+--sections/--skip select a comma-separated subset by name (CI runs the
+serving section in its own leg). --json writes every section's tables as
+machine-readable records (the BENCH_*.json perf-trajectory feed).
 """
 from __future__ import annotations
 
@@ -29,13 +32,17 @@ def main() -> None:
                     help="small sizes; CI smoke mode")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write results as JSON to PATH")
+    ap.add_argument("--sections", metavar="NAMES", default=None,
+                    help="comma-separated section names to run (only)")
+    ap.add_argument("--skip", metavar="NAMES", default=None,
+                    help="comma-separated section names to skip")
     args = ap.parse_args()
     quick = args.quick
 
     t0 = time.perf_counter()
     from benchmarks import (bench_binding_overhead, bench_cost,
                             bench_groupby, bench_kernels, bench_plan,
-                            bench_scaling, bench_sort_chain,
+                            bench_scaling, bench_serving, bench_sort_chain,
                             bench_vs_baselines, bench_window)
 
     print(f"# benchmark run (quick={quick})")
@@ -48,8 +55,16 @@ def main() -> None:
         ("sort_chain", bench_sort_chain.main),
         ("cost", bench_cost.main),
         ("window", bench_window.main),
+        ("serving", bench_serving.main),
         ("scaling", bench_scaling.main),
     ]
+    known = {name for name, _ in sections}
+    only = set(args.sections.split(",")) if args.sections else None
+    skip = set(args.skip.split(",")) if args.skip else set()
+    for requested in (only or set()) | skip:
+        assert requested in known, (requested, sorted(known))
+    sections = [(n, f) for n, f in sections
+                if (only is None or n in only) and n not in skip]
     results: dict[str, list[dict]] = {}
     for name, fn in sections:
         tables = fn(quick)

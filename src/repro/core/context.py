@@ -32,6 +32,7 @@ communication-layer abstraction, preserved.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable, Sequence
 
 import jax
@@ -42,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import ops_agg as A
 from repro.core import plan as PL
 from repro.core import stats as ST
+from repro.core.plan_cache import PlanCache
 from repro.core.repartition import (Partitioning, RangePartitioning,
                                     fresh_range_fingerprint)
 from repro.core.stats import TableStats
@@ -115,6 +117,61 @@ class DistTable:
         return Table.from_arrays(cols, row_count=n)
 
 
+class PlanFuture:
+    """Handle to an asynchronously dispatched plan execution.
+
+    ``DistContext.submit`` returns one of these IMMEDIATELY after the XLA
+    dispatch — JAX's async runtime means the computation is enqueued, not
+    finished, and critically no host sync has happened yet: the overflow
+    counters of a cost-sized plan stay ON DEVICE until :meth:`result`.
+    That is the serving unlock — a latency-critical loop used to pay one
+    blocking device round-trip per cost-sized collect just to learn that
+    (almost always) nothing overflowed.
+
+    :meth:`result` performs the deferred verification: it fetches the
+    overflow counters (by which point the work has typically long
+    finished), and if a cost-sized capacity DID overflow it runs the
+    safe-capacity retry *late* — the never-wrong-results contract is
+    preserved because the table is only observable through this method.
+    Verification also happens opportunistically when a LATER ``submit``
+    finds this future's counters already device-ready (folded into the
+    next dispatch at zero sync cost).
+    """
+
+    def __init__(self, finalize: Callable, overflow_arrays: tuple = ()):
+        self._finalize = finalize
+        self._overflow = tuple(overflow_arrays)
+        self._out = None
+
+    @property
+    def done(self) -> bool:
+        """True once the result has been verified and materialized."""
+        return self._out is not None
+
+    def ready(self) -> bool:
+        """Best-effort: is the deferred verification now sync-free (every
+        overflow counter already on host-reachable memory)? False when the
+        runtime cannot tell — callers must treat this as advisory."""
+        if self._out is not None:
+            return True
+        try:
+            return all(bool(x.is_ready()) for x in self._overflow)
+        except AttributeError:
+            return False
+
+    def result_with_stats(self):
+        """Verified ``(DistTable, per-shuffle stats)`` — blocks on the
+        overflow check (and runs the late safe retry) the first time."""
+        if self._out is None:
+            self._out = self._finalize()
+            self._finalize = None  # drop plan/table refs once resolved
+        return self._out
+
+    def result(self) -> DistTable:
+        """The verified output table (see :meth:`result_with_stats`)."""
+        return self.result_with_stats()[0]
+
+
 class DistContext:
     """Binds the relational operators to a mesh axis (the 'communicator').
 
@@ -124,13 +181,18 @@ class DistContext:
     axis_name: the mesh axis rows shuffle over (must exist in `mesh`).
     """
 
-    def __init__(self, mesh: Mesh | None = None, axis_name: str = "shuffle"):
+    def __init__(self, mesh: Mesh | None = None, axis_name: str = "shuffle",
+                 plan_cache: PlanCache | None = None):
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
         assert axis_name in mesh.axis_names, (axis_name, mesh.axis_names)
         self.mesh = mesh
         self.axis_name = axis_name
-        self._cache: dict = {}
+        # canonical-plan -> compiled-executable cache, shared by every
+        # client submitting through this context (eager ops, collect,
+        # collect_async/submit alike). LRU with budgets + hit/miss/evict/
+        # recompile counters — see repro.core.plan_cache.
+        self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
         # how many cost-sized plans overflowed their estimated capacities
         # and were re-run at conservative sizes (the overflow-retry path)
         self.overflow_retries = 0
@@ -138,6 +200,9 @@ class DistContext:
         # proved wrong: later collects go STRAIGHT to the safe plan (one
         # conservative execution, not a doomed sized run + retry each time)
         self._overflow_bad: set = set()
+        # in-flight futures with deferred overflow verification; weakly
+        # held so an abandoned future never pins its tables
+        self._pending: list = []
 
     # -- properties ---------------------------------------------------------
     @property
@@ -268,10 +333,20 @@ class DistContext:
 
         return global_fn
 
-    def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
+    def cache_stats(self) -> dict:
+        """Plan-cache counter snapshot (hits/misses/evictions/recompiles
+        plus residency) — the serving benchmark's warm-path gate reads
+        this before and after a run to assert 0 recompiles."""
+        return self.plan_cache.stats()
+
+    def _run(self, key, body: Callable, tabs: Sequence[DistTable],
+             guards: tuple = ()):
         """Execute per-shard `body` over DistTables under shard_map + jit.
 
-        `key` controls the jit cache (None -> no caching, e.g. user lambdas).
+        ``key`` controls the executable cache (None -> never cached);
+        ``guards`` are objects whose identity the key embeds (keyless
+        user lambdas) — the cache pins them so their ids stay valid for
+        the entry's lifetime.
         """
         global_fn = self._make_global(body)
         args = tuple((t.columns, t.row_counts) for t in tabs)
@@ -280,19 +355,26 @@ class DistContext:
                 tuple(sorted((k, v.shape, str(v.dtype))
                              for k, v in t.columns.items()))
                 for t in tabs))
-            jitted = self._cache.get(sig)
+            jitted = self.plan_cache.get(sig)
             if jitted is None:
                 jitted = jax.jit(global_fn)
-                self._cache[sig] = jitted
+                self.plan_cache.put(sig, jitted, guards=guards)
             cols, rc, stats = jitted(*args)
         else:
             cols, rc, stats = jax.jit(global_fn)(*args)
         return DistTable(cols, rc), stats
 
-    def _run_plan(self, plan: PL.Node, tabs: Sequence[DistTable], *,
-                  optimize: bool = False, report: list | None = None):
-        """The single execution path: (optionally optimized) plan -> one
-        shard_map body -> jit keyed by the canonical plan.
+    def submit(self, plan: PL.Node, tabs: Sequence[DistTable], *,
+               optimize: bool = False, report: list | None = None
+               ) -> PlanFuture:
+        """Async dispatch: compile (or cache-hit) + enqueue the plan and
+        return a :class:`PlanFuture` IMMEDIATELY — the concurrent-query
+        serving path. The single execution pipeline is unchanged:
+        (optionally optimized) plan -> one shard_map body -> jit keyed by
+        the canonical plan in :attr:`plan_cache`; plans containing keyless
+        user lambdas fall back to identity keys (``PL.identity_key``)
+        whose callables the cache pins, so even ad-hoc predicates stop
+        re-jitting per call.
 
         ``report``, when given, receives one static record per potential
         shuffle at TRACE time — a jit-cache hit leaves it empty (use
@@ -300,24 +382,22 @@ class DistContext:
 
         When any input carries TableStats the cost model sizes the plan's
         capacities from cardinality ESTIMATES. Estimates can be wrong, so
-        this is the overflow-safe point: if a cost-sized plan reports
-        overflow ON A COST-SIZED CAPACITY (per-entry attribution via
-        ``plan.cost_sized_stats_mask`` — overflow on a user-set capacity
-        keeps the pre-existing surface-in-stats contract and never
-        triggers a retry), the plan is recompiled ONCE with the
-        estimate-derived capacities stripped and the remaining defaults
-        taken at the unoverflowable bound
-        (``execute_plan(..., safe_capacity=True)``) and re-run — never
-        wrong results. ``self.overflow_retries`` counts these; a plan key
-        that failed once goes straight to the safe plan on later collects
-        (single conservative execution), and outputs of a failed-estimate
-        run carry NO propagated stats, so downstream stages fall back to
+        the future is the overflow-safe point: verification of the
+        overflow counters is DEFERRED — no host sync happens here — until
+        ``future.result()``, or until a later ``submit`` finds the
+        counters already device-ready (the check folds into the next
+        dispatch). If a cost-sized capacity did overflow (per-entry
+        attribution via ``plan.cost_sized_stats_mask`` — overflow on a
+        user-set capacity keeps the pre-existing surface-in-stats contract
+        and never triggers a retry), the verification runs the safe-
+        capacity recompile ONCE (``execute_plan(..., safe_capacity=True)``,
+        cached under its own ``plan-safe`` key) and the future resolves to
+        the retried result — never wrong results, because the table is
+        only observable through ``result()``. ``self.overflow_retries``
+        counts these; a plan key that failed once goes straight to the
+        safe plan on later submits, and outputs of a failed-estimate run
+        carry NO propagated stats, so downstream stages fall back to
         conservative sizing instead of cascading the bad numbers.
-
-        Note the cost of safety: a cost-sized collect synchronizes on the
-        overflow counters (one host sync per dispatch). Latency-critical
-        loops that cannot afford it should pass explicit capacities or
-        skip ``analyze``.
         """
         p = self.num_shards
         logical = plan
@@ -339,7 +419,11 @@ class DistContext:
             part = dataclasses.replace(
                 part, fingerprint=fresh_range_fingerprint())
         key = PL.canonical_key(plan)
-        run_key = None if key is None else ("plan", key)
+        if key is None:
+            ikey, guards = PL.identity_key(plan)
+            run_key, run_guards = ("plan-id", ikey), guards
+        else:
+            run_key, run_guards = ("plan", key), ()
         sized = have_stats and PL.plan_cost_sized(plan)
 
         def run_safe():
@@ -349,18 +433,20 @@ class DistContext:
             else:
                 safe_plan = PL.apply_cost_model(logical, schemas, p, None)
             safe_key = PL.canonical_key(safe_plan)
+            if safe_key is None:
+                s_ikey, s_guards = PL.identity_key(safe_plan)
+                safe_run_key = ("plan-safe-id", s_ikey)
+            else:
+                safe_run_key, s_guards = ("plan-safe", safe_key), ()
 
             def safe_body(*tables):
                 return PL.execute_plan(
                     safe_plan, tables, axis_name=self.axis_name,
                     num_shards=p, safe_capacity=True)
 
-            return self._run(
-                None if safe_key is None else ("plan-safe", safe_key),
-                safe_body, tabs)
+            return self._run(safe_run_key, safe_body, tabs, guards=s_guards)
 
-        bad_estimates = sized and run_key is not None \
-            and run_key in self._overflow_bad
+        bad_estimates = sized and run_key in self._overflow_bad
         if bad_estimates:
             out, stats = run_safe()  # this plan's estimates already failed
         else:
@@ -369,23 +455,70 @@ class DistContext:
                                        axis_name=self.axis_name,
                                        num_shards=p, report=report)
 
-            out, stats = self._run(run_key, body, tabs)
-            if sized:
+            out, stats = self._run(run_key, body, tabs, guards=run_guards)
+
+        def finalize():
+            nonlocal out, stats, bad_estimates
+            if sized and not bad_estimates:
                 mask = PL.cost_sized_stats_mask(plan)
                 if len(mask) != len(stats):  # defensive: never mis-attribute
                     mask = [True] * len(stats)
                 overflow = sum(int(np.asarray(s.overflow).sum())
                                for s, m in zip(stats, mask) if m)
-                if overflow > 0:
+                if overflow > 0:  # late safe-capacity retry
                     bad_estimates = True
                     self.overflow_retries += 1
-                    if run_key is not None:
-                        self._overflow_bad.add(run_key)
+                    self._overflow_bad.add(run_key)
                     out, stats = run_safe()
-        est = None
-        if have_stats and not bad_estimates:
-            est = PL.estimate_output_stats(plan, schemas, input_stats)
-        return dataclasses.replace(out, partitioning=part, stats=est), stats
+            est = None
+            if have_stats and not bad_estimates:
+                est = PL.estimate_output_stats(plan, schemas, input_stats)
+            final = dataclasses.replace(out, partitioning=part, stats=est)
+            return final, stats
+
+        # only a cost-sized first pass has anything to verify: everything
+        # else resolves without ever touching the host
+        overflow_arrays = tuple(s.overflow for s in stats) \
+            if sized and not bad_estimates else ()
+        fut = PlanFuture(finalize, overflow_arrays)
+        self._fold_pending(skip=fut)
+        if overflow_arrays:
+            self._pending.append(weakref.ref(fut))
+        return fut
+
+    def _fold_pending(self, skip: PlanFuture | None = None):
+        """Verify earlier futures whose overflow counters are already
+        device-ready — the deferred check folded into this dispatch at
+        zero sync cost. Dropped or resolved futures fall out of the list;
+        a future whose counters are still in flight stays deferred."""
+        still = []
+        for ref in self._pending:
+            f = ref()
+            if f is None or f.done or f is skip:
+                continue
+            if f.ready():
+                f.result_with_stats()
+            else:
+                still.append(ref)
+        self._pending = still
+
+    def drain(self):
+        """Block until every outstanding future is verified (the explicit
+        end-of-batch sync for fire-and-forget submitters)."""
+        for ref in self._pending:
+            f = ref()
+            if f is not None:
+                f.result_with_stats()
+        self._pending = []
+
+    def _run_plan(self, plan: PL.Node, tabs: Sequence[DistTable], *,
+                  optimize: bool = False, report: list | None = None):
+        """Synchronous execution: :meth:`submit` + immediate verification.
+        Every eager operator and ``LazyFrame.collect`` rides this; the
+        semantics (overflow-safe retry, stats propagation, partitioning
+        tags) live in :meth:`submit`'s future."""
+        return self.submit(plan, tabs, optimize=optimize,
+                           report=report).result_with_stats()
 
     # -- pleasingly parallel operators (no network; paper §II-B-1/2) ----------
     def select(self, t: DistTable, predicate: Callable[[dict], jax.Array],

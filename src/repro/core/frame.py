@@ -236,3 +236,14 @@ class LazyFrame:
         """Optimize + compile + run the whole chain as one shard_map program."""
         out, _ = self.collect_with_stats()
         return out
+
+    def collect_async(self):
+        """Async dispatch: enqueue the fused program and return a
+        :class:`~repro.core.context.PlanFuture` immediately — no host
+        sync, not even the cost-sized overflow check (verified deferred,
+        at ``future.result()`` or folded into a later dispatch). N
+        clients submitting through one context overlap their host-side
+        planning with each other's device execution and share the
+        context's plan cache; results are bit-identical to sequential
+        ``collect()`` calls."""
+        return self._ctx.submit(self._plan, self._inputs, optimize=True)

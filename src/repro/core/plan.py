@@ -1015,6 +1015,50 @@ def canonical_key(plan: Node):
         return None
 
 
+def identity_key(plan: Node) -> tuple[object, tuple]:
+    """Fallback cache key for plans :func:`canonical_key` rejects: keyless
+    predicates are keyed by OBJECT IDENTITY instead of a user-supplied
+    key. Returns ``(key, guards)`` where ``guards`` are the objects whose
+    ids the key embeds — an id is only meaningful while its object lives,
+    so the cache must pin the guards for the entry's lifetime
+    (``repro.core.plan_cache.PlanCache`` does).
+
+    The identity used is the predicate's ``__code__`` object plus the
+    identities of everything that parameterizes its behavior (captured
+    closure cells, defaults, globals dict). A lambda is re-created on
+    every pass through its definition site but its code object is built
+    ONCE at compile time — so the common serving pattern of clients
+    re-building structurally identical queries with inline lambdas stays
+    cache-hot, while a lambda capturing a *different* object (changed
+    closure state) misses and compiles its own entry. Callables without
+    ``__code__`` fall back to the object's own id.
+    """
+    guards: list = []
+    key = _canon(plan, guards)
+    return key, tuple(guards)
+
+
+def _identity_of(predicate, guards: list):
+    """Hashable behavior-identity of a keyless callable (see
+    :func:`identity_key`); appends the id-bearing objects to ``guards``."""
+    code = getattr(predicate, "__code__", None)
+    try:
+        cells = tuple(c.cell_contents
+                      for c in getattr(predicate, "__closure__", None) or ())
+    except ValueError:  # unfilled cell (self-referential def): no identity
+        code = None
+    if code is None:
+        guards.append(predicate)
+        return ("@id", id(predicate))
+    defaults = tuple(getattr(predicate, "__defaults__", None) or ())
+    guards.append(code)
+    guards.extend(cells)
+    guards.extend(defaults)
+    return ("@code", id(code), tuple(id(c) for c in cells),
+            tuple(id(d) for d in defaults),
+            id(getattr(predicate, "__globals__", None)))
+
+
 def _predicate_fingerprint(predicate):
     """Best-effort structural identity of a predicate's code: a fresh
     lambda with identical source shares it (cache hit), while two
@@ -1027,22 +1071,27 @@ def _predicate_fingerprint(predicate):
     return (code.co_code, tuple(map(str, code.co_consts)), code.co_names)
 
 
-def _canon(node: Node):
+def _canon(node: Node, guards: list | None = None):
     name = type(node).__name__
     if isinstance(node, Scan):
         return (name, node.slot)
     if isinstance(node, Select):
         if node.key is None:
-            raise _Uncacheable
-        return (name, node.key, _predicate_fingerprint(node.predicate),
-                node.columns, _canon(node.child))
+            if guards is None:
+                raise _Uncacheable
+            key = _identity_of(node.predicate, guards)
+        else:
+            key = node.key
+        return (name, key, _predicate_fingerprint(node.predicate),
+                node.columns, _canon(node.child, guards))
     vals = []
     for f in dataclasses.fields(node):
         v = getattr(node, f.name)
         if isinstance(v, Node) or callable(v):
             continue
         vals.append((f.name, v))
-    return (name, tuple(vals)) + tuple(_canon(c) for c in children(node))
+    return (name, tuple(vals)) + tuple(_canon(c, guards)
+                                       for c in children(node))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,146 @@
+"""Canonical-plan -> compiled-executable cache (the serving-path jit cache).
+
+Concurrent-query serving (ROADMAP north star: many clients, not single-query
+wall time) lives or dies on never recompiling a plan shape a client has
+already run. ``DistContext`` used to keep an ad-hoc unbounded ``dict`` from
+``(canonical plan, input signature)`` to the jitted executable; this module
+makes that cache first-class:
+
+* **LRU admission with budgets** — ``max_entries`` bounds the executable
+  count and ``max_weight`` bounds a caller-supplied weight sum (entries
+  default to weight 1), so a long-lived serving session over an open-ended
+  query mix cannot grow without bound. Reuse refreshes recency.
+* **Counters** — ``hits`` / ``misses`` / ``evictions`` / ``recompiles``
+  (a miss on a key that was cached before and has since been evicted —
+  the signal that the budgets are too small for the working set), surfaced
+  through :meth:`stats` and re-exported as
+  ``DistContext.cache_stats()`` for the serving benchmark's warm-path
+  "0 recompiles" gate.
+* **Identity-keyed entries with guards** — plans containing keyless user
+  lambdas cannot be canonicalized, so they are keyed by the *object
+  identity* of their callables (``plan.identity_key``). An ``id()`` is
+  only meaningful while the object lives; the cache therefore pins each
+  guard object for the lifetime of its entry (so the id cannot be
+  recycled into a false hit) and additionally registers a weakref
+  callback that invalidates the entry should a guard die while the entry
+  is still resident. Eviction releases the pin — memory is bounded by
+  the LRU budgets, not by user-lambda lifetimes.
+
+Safe-capacity recompiles are cached under their own namespace by the
+caller (``("plan-safe", ...)`` vs ``("plan", ...)``), so the sized and
+conservative executables of one logical plan never collide.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
+from typing import Iterable
+
+
+class _Entry:
+    __slots__ = ("value", "weight", "guards", "refs")
+
+    def __init__(self, value, weight: int, guards: tuple):
+        self.value = value
+        self.weight = weight
+        self.guards = guards  # strong pins: ids stay valid while cached
+        self.refs: list = []  # weakrefs guarding against external decay
+
+
+class PlanCache:
+    """LRU map from hashable plan keys to compiled executables."""
+
+    def __init__(self, max_entries: int = 256,
+                 max_weight: float | None = None):
+        assert max_entries >= 1, max_entries
+        self.max_entries = max_entries
+        self.max_weight = max_weight
+        self._entries: OrderedDict[object, _Entry] = OrderedDict()
+        self._weight = 0
+        self._ever: set = set()  # keys that were admitted at least once
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.recompiles = 0
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:  # no counter side effects
+        return key in self._entries
+
+    @property
+    def weight(self) -> int:
+        return self._weight
+
+    def keys(self) -> Iterable:
+        return list(self._entries.keys())
+
+    def stats(self) -> dict:
+        """Counter snapshot (plain ints — JSON-serializable)."""
+        return {"entries": len(self._entries), "weight": self._weight,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "recompiles": self.recompiles}
+
+    # -- the cache protocol --------------------------------------------------
+    def get(self, key):
+        """The cached executable, or None. Counts hit/miss and refreshes
+        recency; a miss on a previously-admitted key counts a recompile."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            if key in self._ever:
+                self.recompiles += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(key)
+        return entry.value
+
+    def put(self, key, value, *, weight: int = 1, guards: tuple = ()):
+        """Admit ``value`` under ``key``, evicting LRU entries over budget.
+
+        ``guards``: objects whose identity the key depends on (keyless
+        predicates keyed by ``id()``). They are pinned while the entry is
+        resident and the entry dies with them — never a stale-id hit.
+        """
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._weight -= old.weight
+        entry = _Entry(value, weight, tuple(guards))
+        self._entries[key] = entry
+        self._weight += weight
+        self._ever.add(key)
+        for g in entry.guards:
+            try:
+                entry.refs.append(
+                    weakref.ref(g, lambda _, k=key: self.invalidate(k)))
+            except TypeError:  # not weakref-able: the strong pin suffices
+                pass
+        self._evict_over_budget(keep=key)
+
+    def invalidate(self, key) -> bool:
+        """Drop ``key`` if resident (guard death / explicit flush)."""
+        entry = self._entries.pop(key, None)
+        if entry is None:
+            return False
+        self._weight -= entry.weight
+        self.evictions += 1
+        return True
+
+    def clear(self):
+        self.evictions += len(self._entries)
+        self._entries.clear()
+        self._weight = 0
+
+    def _evict_over_budget(self, keep):
+        while len(self._entries) > self.max_entries or (
+                self.max_weight is not None
+                and self._weight > self.max_weight
+                and len(self._entries) > 1):
+            key = next(iter(self._entries))
+            if key == keep and len(self._entries) == 1:
+                break  # never evict the entry just admitted
+            entry = self._entries.pop(key)
+            self._weight -= entry.weight
+            self.evictions += 1

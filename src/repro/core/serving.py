@@ -1,0 +1,198 @@
+"""Concurrent-query serving: a session layer over async plan dispatch.
+
+The paper's pitch is a data-engineering layer embedded in live AI workloads
+(PyTorch/TF/Jupyter, paper §III) rather than batch pipelines — which means
+MANY concurrent clients issuing small relational queries over shared
+registered tables, and the metric that matters is per-query p50/p99 latency
+and sustained queries/sec under an open loop, not single-query wall time.
+
+:class:`ServingSession` is that layer:
+
+* **registered tables** — named ``DistTable``s shared by every client
+  (``register`` / ``frame``), the catalog a SQL front-end will later bind
+  to;
+* **async submission** — ``submit`` dispatches a ``LazyFrame`` through
+  ``DistContext.submit`` and returns the future immediately; the shared
+  plan cache means a query shape any client has run before skips
+  straight to dispatch (0 recompiles on the warm path);
+* **the open loop** — :meth:`run_open_loop` drives N logical clients
+  through a mixed-shape workload either ``sequential`` (submit + resolve
+  one at a time: every cost-sized query pays its deferred-verification
+  sync before the next starts) or ``async`` (a bounded in-flight window
+  of futures: dispatch overlaps device execution and verification folds
+  into later dispatches), and reports per-query latency percentiles,
+  queries/sec, and the plan-cache counter deltas.
+
+Results are bit-identical between the two modes — asserted by
+``benchmarks/bench_serving.py`` and the dist-case tests — because a future
+is only observable through its verified ``result()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.context import DistContext, DistTable, PlanFuture
+from repro.core.frame import LazyFrame
+from repro.core.table import Table
+
+# one workload entry: (label, builder); the builder receives the session
+# and returns the LazyFrame to execute — closed over once at definition
+# time, so even keyless lambdas inside it stay cache-hot (identity keys)
+QueryBuilder = Callable[["ServingSession"], LazyFrame]
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """Open-loop measurement: latency distribution + throughput + cache."""
+
+    mode: str                  # "sequential" | "async"
+    num_clients: int
+    num_queries: int
+    elapsed_s: float
+    latencies_s: list[float]
+    shapes: list[str]          # per-query workload label, submission order
+    cache_before: dict
+    cache_after: dict
+
+    @property
+    def qps(self) -> float:
+        return self.num_queries / self.elapsed_s if self.elapsed_s > 0 \
+            else float("inf")
+
+    def percentile_ms(self, q: float) -> float:
+        return float(np.percentile(np.asarray(self.latencies_s), q) * 1e3)
+
+    @property
+    def p50_ms(self) -> float:
+        return self.percentile_ms(50)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.percentile_ms(99)
+
+    @property
+    def compiles(self) -> int:
+        """Executables compiled DURING the run (cache-miss delta) — 0 on a
+        warm cache is the serving gate."""
+        return self.cache_after["misses"] - self.cache_before["misses"]
+
+    @property
+    def recompiles(self) -> int:
+        """Misses on previously-cached-then-evicted keys during the run —
+        nonzero means the cache budgets are too small for the working set."""
+        return self.cache_after["recompiles"] - self.cache_before["recompiles"]
+
+    def to_dict(self) -> dict:
+        return {"mode": self.mode, "clients": self.num_clients,
+                "queries": self.num_queries,
+                "elapsed_s": self.elapsed_s, "qps": self.qps,
+                "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
+                "compiles": self.compiles, "recompiles": self.recompiles,
+                "cache": dict(self.cache_after)}
+
+    def summary(self) -> str:
+        return (f"[{self.mode}] {self.num_queries} queries / "
+                f"{self.num_clients} clients: {self.qps:.1f} q/s, "
+                f"p50 {self.p50_ms:.1f}ms, p99 {self.p99_ms:.1f}ms, "
+                f"{self.compiles} compiles ({self.recompiles} recompiles)")
+
+
+class ServingSession:
+    """Named shared tables + async dispatch + the open-loop driver."""
+
+    def __init__(self, ctx: DistContext, *, max_in_flight: int = 32):
+        assert max_in_flight >= 1, max_in_flight
+        self.ctx = ctx
+        self.max_in_flight = max_in_flight
+        self._tables: dict[str, DistTable] = {}
+
+    # -- the catalog ---------------------------------------------------------
+    def register(self, name: str, table: Table | DistTable, *,
+                 analyze: bool = False) -> DistTable:
+        """Register ``table`` under ``name`` (scattering a host Table).
+        ``analyze=True`` attaches TableStats so every query over it is
+        cost-sized — overflow verification rides the deferred path."""
+        if isinstance(table, Table):
+            table = self.ctx.scatter(table)
+        if analyze:
+            table = self.ctx.analyze(table)
+        self._tables[name] = table
+        return table
+
+    def table(self, name: str) -> DistTable:
+        return self._tables[name]
+
+    def table_names(self) -> list[str]:
+        return sorted(self._tables)
+
+    def frame(self, name: str) -> LazyFrame:
+        """A LazyFrame over the registered table — the query entry point."""
+        return self.ctx.frame(self._tables[name])
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, query: LazyFrame | QueryBuilder) -> PlanFuture:
+        """Dispatch one query (a LazyFrame or a builder over this session)
+        and return its future immediately."""
+        frame = query(self) if callable(query) else query
+        return frame.collect_async()
+
+    # -- the open loop -------------------------------------------------------
+    def run_open_loop(self, workload: Sequence[tuple[str, QueryBuilder]], *,
+                      num_clients: int = 4, queries_per_client: int = 4,
+                      mode: str = "async"
+                      ) -> tuple[ServingReport, list[DistTable]]:
+        """Drive ``num_clients`` logical clients through the mixed-shape
+        ``workload`` (round-robin interleaved, so no two consecutive
+        submissions share a shape once clients > 1) and measure per-query
+        latency (submit -> verified result materialized) and overall
+        queries/sec. Returns the report and the per-query results in
+        submission order — the bit-identity anchor between modes.
+        """
+        assert mode in ("sequential", "async"), mode
+        assert len(workload) >= 1
+        # submission order: clients interleave, each walking the workload
+        # from a different offset — the mixed-shape open loop
+        queries = []
+        for step in range(queries_per_client):
+            for client in range(num_clients):
+                label, builder = workload[
+                    (step + client) % len(workload)]
+                queries.append((label, builder))
+
+        before = self.ctx.cache_stats()
+        results: list[DistTable | None] = [None] * len(queries)
+        latencies: list[float] = [0.0] * len(queries)
+
+        def resolve(i: int, t_submit: float, fut: PlanFuture):
+            out = fut.result()
+            jax.block_until_ready(out.columns)
+            latencies[i] = time.perf_counter() - t_submit
+            results[i] = out
+
+        t0 = time.perf_counter()
+        if mode == "sequential":
+            for i, (label, builder) in enumerate(queries):
+                t = time.perf_counter()
+                resolve(i, t, self.submit(builder))
+        else:
+            in_flight: list[tuple[int, float, PlanFuture]] = []
+            for i, (label, builder) in enumerate(queries):
+                t = time.perf_counter()
+                in_flight.append((i, t, self.submit(builder)))
+                if len(in_flight) >= self.max_in_flight:
+                    resolve(*in_flight.pop(0))
+            for item in in_flight:
+                resolve(*item)
+        elapsed = time.perf_counter() - t0
+
+        report = ServingReport(
+            mode=mode, num_clients=num_clients, num_queries=len(queries),
+            elapsed_s=elapsed, latencies_s=latencies,
+            shapes=[label for label, _ in queries],
+            cache_before=before, cache_after=self.ctx.cache_stats())
+        return report, results

@@ -727,6 +727,119 @@ def case_elastic_restore():
             "elastic_ok": max(vals) - min(vals) < 2e-3}
 
 
+def case_serving_async():
+    """Concurrent-query serving on 8 shards: N interleaved clients driving
+    collect_async through a shared ServingSession must produce per-query
+    results bit-identical to sequential collects, with ZERO compiles on
+    the warm cache (including the inline keyless lambda — code-identity
+    keys keep a re-created predicate hot), and out-of-order future
+    resolution must not perturb anything."""
+    from repro.core.serving import ServingSession
+    from repro.core.table import Table
+    from repro.testing.compare import tables_bitwise_equal
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    rng = np.random.default_rng(71)
+    n = 500 * p
+    orders = Table.from_arrays({
+        "k": rng.integers(0, 64, n).astype(np.int32),
+        "d0": rng.integers(-50, 50, n).astype(np.float32)})
+    dims = Table.from_arrays({
+        "k": np.arange(64, dtype=np.int32),
+        "w": rng.integers(0, 9, 64).astype(np.float32)})
+    sess = ServingSession(ctx, max_in_flight=6)
+    sess.register("orders", orders, analyze=True)
+    sess.register("dims", dims, analyze=True)
+    workload = [
+        ("gb", lambda s: s.frame("orders")
+            .groupby("k", (("d0", "sum"), ("d0", "count")))),
+        ("topn", lambda s: s.frame("orders").sort("k").limit(16)),
+        ("sel", lambda s: s.frame("orders")
+            .select(lambda c: c["d0"] > 0.0)
+            .groupby("k", (("d0", "mean"),))),
+        ("join", lambda s: s.frame("orders").join(s.frame("dims"), "k")
+            .groupby("k", (("w", "sum"),))),
+    ]
+    seq_rep, seq_res = sess.run_open_loop(
+        workload, num_clients=3, queries_per_client=2, mode="sequential")
+    asy_rep, asy_res = sess.run_open_loop(
+        workload, num_clients=3, queries_per_client=2, mode="async")
+    identical = all(tables_bitwise_equal(a.to_table(), b.to_table())
+                    for a, b in zip(asy_res, seq_res))
+
+    # out-of-order resolution: submit every shape, resolve in REVERSE
+    pre = ctx.cache_stats()
+    base = [sess.submit(b).result() for _, b in workload]
+    futs = [sess.submit(b) for _, b in workload]
+    rev = [f.result() for f in reversed(futs)][::-1]
+    rev_ok = all(tables_bitwise_equal(a.to_table(), b.to_table())
+                 for a, b in zip(rev, base))
+    return {
+        "identical": identical,
+        "reverse_resolution_ok": rev_ok,
+        "cold_compiles": seq_rep.compiles,
+        "warm_compiles": asy_rep.compiles + (
+            ctx.cache_stats()["misses"] - pre["misses"]),
+        "warm_recompiles": asy_rep.recompiles,
+        "queries_per_mode": seq_rep.num_queries,
+        "seq_qps": seq_rep.qps, "async_qps": asy_rep.qps,
+        "p50_ms": asy_rep.p50_ms, "p99_ms": asy_rep.p99_ms,
+    }
+
+
+def case_async_overflow_deferred():
+    """The deferred-verification contract on the async path: a cost-sized
+    plan with a WRONG estimate (single-key skew, same setup as
+    case_overflow_retry) dispatches with no host sync — the overflow is
+    only discovered at ``future.result()``, which runs EXACTLY ONE
+    safe-capacity retry and returns oracle-exact rows. A repeat submit of
+    the known-bad plan goes straight to the safe executable (no new
+    retry), and both the sized and safe executables sit in the plan cache
+    under distinct key namespaces."""
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    n_per = 400
+    parts = [Table.from_arrays({
+        "k": np.zeros(n_per, np.int32),  # ONE key: maximal placement skew
+        "d0": np.arange(i * n_per, (i + 1) * n_per).astype(np.float32)})
+        for i in range(p)]
+    dt = ctx.analyze(ctx.from_local_parts(parts))
+    assert dt.stats is not None and dt.stats.col("k").ndv <= 2.0
+
+    fut = ctx.frame(dt).partition_by("k").collect_async()
+    # dispatch must NOT have verified anything: the wrong estimate is
+    # still unknown to the host, the future unresolved
+    deferred = (ctx.overflow_retries == 0) and not fut.done
+    out = fut.result()  # <- verification: discovers overflow, retries safe
+    got = out.to_table().to_numpy()
+    want_d0 = np.concatenate([np.asarray(t.columns["d0"]) for t in parts])
+    retries_first = ctx.overflow_retries
+    again = fut.result()  # resolved future: same object, no re-execution
+    idempotent = again is out
+
+    # repeat submit: the known-bad key routes straight to the safe plan
+    out2 = ctx.frame(dt).partition_by("k").collect_async().result()
+    got2 = out2.to_table().to_numpy()
+    namespaces = sorted({k[0][0] for k in ctx.plan_cache.keys()})
+    return {
+        "deferred": deferred,
+        "retries": retries_first,
+        "retries_after_repeat": ctx.overflow_retries,
+        "idempotent": idempotent,
+        "stats_dropped": out.stats is None,
+        "rows": int(out.global_rows()),
+        "rows_expect": p * n_per,
+        "identical": bool(
+            np.array_equal(got["d0"], want_d0)
+            and np.array_equal(got["k"], np.zeros(p * n_per, np.int32))
+            and np.array_equal(got2["d0"], want_d0)),
+        "cache_namespaces": namespaces,
+    }
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

@@ -159,6 +159,38 @@ def test_dist_sort_multikey():
     assert r["overflow"] == 0, r
 
 
+def test_serving_async_interleaved_matches_sequential():
+    """The serving contract: N interleaved collect_async clients over a
+    shared session are bit-identical per query to sequential collects,
+    the warm cache compiles NOTHING (inline keyless lambdas included),
+    and resolving futures out of submission order changes nothing."""
+    r = run_case("serving_async")
+    assert r["identical"], r
+    assert r["reverse_resolution_ok"], r
+    assert r["cold_compiles"] > 0, r        # first pass really compiled
+    assert r["warm_compiles"] == 0, r       # ... and never again
+    assert r["warm_recompiles"] == 0, r
+    assert r["async_qps"] > 0 and r["p99_ms"] > 0, r
+
+
+def test_async_overflow_verification_is_deferred():
+    """Deferred overflow verification: a wrong cost estimate is invisible
+    at submit time (no host sync, future unresolved), discovered at
+    result(), retried at safe capacities EXACTLY ONCE with oracle-exact
+    rows; a repeat submit routes straight to the safe executable, and the
+    sized + safe executables live under distinct cache namespaces."""
+    r = run_case("async_overflow_deferred")
+    assert r["deferred"], r
+    assert r["retries"] == 1, r
+    assert r["retries_after_repeat"] == 1, r
+    assert r["idempotent"], r
+    assert r["stats_dropped"], r
+    assert r["rows"] == r["rows_expect"], r
+    assert r["identical"], r
+    assert "plan" in r["cache_namespaces"], r
+    assert "plan-safe" in r["cache_namespaces"], r
+
+
 def test_moe_ep_matches_local():
     r = run_case("moe_ep")
     assert r["moe_ep_err"] < 2e-5, r

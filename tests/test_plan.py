@@ -444,14 +444,23 @@ def test_plan_report_accounts_wire_bytes(ctx):
 
 def test_select_cache_key_controls_recompilation(ctx):
     t = ctx.scatter(int_table(64, 16, 41))
-    n0 = len(ctx._cache)
+    n0 = len(ctx.plan_cache)
     ctx.select(t, lambda c: c["d0"] > 0, key="cached_pred")
-    n1 = len(ctx._cache)
+    n1 = len(ctx.plan_cache)
     assert n1 == n0 + 1
     ctx.select(t, lambda c: c["d0"] > 0, key="cached_pred")
-    assert len(ctx._cache) == n1  # hit
-    ctx.select(t, lambda c: c["d0"] < 0)  # keyless -> uncacheable, no entry
-    assert len(ctx._cache) == n1
+    assert len(ctx.plan_cache) == n1  # hit
+    # keyless: cached under a code-identity key — one entry, and a
+    # re-created lambda from the same definition site HITS it
+    def keyless():
+        return ctx.select(t, lambda c: c["d0"] < 0)
+
+    keyless()
+    assert len(ctx.plan_cache) == n1 + 1
+    hits = ctx.cache_stats()["hits"]
+    keyless()
+    assert len(ctx.plan_cache) == n1 + 1
+    assert ctx.cache_stats()["hits"] == hits + 1
 
 
 def test_same_key_different_predicate_not_conflated(ctx):
@@ -470,9 +479,9 @@ def test_collect_caches_on_canonical_plan(ctx):
                  .select(lambda c: c["d0"] > 0, key="q")
                  .groupby("k", (("d0", "sum"),)))
     f().collect()
-    n1 = len(ctx._cache)
+    n1 = len(ctx.plan_cache)
     f().collect()  # same canonical plan + shapes -> cache hit
-    assert len(ctx._cache) == n1
+    assert len(ctx.plan_cache) == n1
 
 
 # --- cost model: limit pushdown, strategy choice, capacity sizing -------------

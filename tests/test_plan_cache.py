@@ -1,0 +1,250 @@
+"""PlanCache + async-dispatch unit tests (single-device, subprocess-free).
+
+Covers the serving-path cache contracts: canonical-key stability across
+structurally-equal plans, LRU admission/eviction order and budgets,
+recompile accounting, identity keys for keyless user lambdas (code-object
+keys: a re-created lambda from the same definition site hits, a changed
+captured object misses), guard pinning/invalidation, safe-capacity
+variants under distinct key namespaces, and interleaved ``collect_async``
+futures resolving bit-identical to sequential ``collect`` calls.
+
+Deliberately hypothesis-free: part of the minimal-environment tier-1 gate.
+"""
+import numpy as np
+import pytest
+
+from repro.core import plan as PL
+from repro.core.context import DistContext
+from repro.core.plan_cache import PlanCache
+from repro.core.serving import ServingSession
+from repro.core.table import Table
+from repro.testing.compare import tables_bitwise_equal
+
+
+# --- canonical keys -----------------------------------------------------------
+
+
+def _gb_plan(strategy="auto"):
+    return PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"), ("d0", "count")),
+                      strategy=strategy)
+
+
+def test_canonical_key_stable_across_structurally_equal_plans():
+    a = PL.Limit(PL.Sort(_gb_plan(), ("k",)), 10)
+    b = PL.Limit(PL.Sort(_gb_plan(), ("k",)), 10)
+    assert a is not b
+    assert PL.canonical_key(a) == PL.canonical_key(b)
+    assert hash(PL.canonical_key(a)) == hash(PL.canonical_key(b))
+
+
+def test_canonical_key_distinguishes_parameters():
+    base = PL.canonical_key(_gb_plan())
+    assert PL.canonical_key(_gb_plan("shuffle")) != base
+    assert PL.canonical_key(PL.Limit(_gb_plan(), 10)) != base
+
+
+def test_canonical_key_rejects_keyless_select():
+    plan = PL.Select(PL.Scan(0), lambda c: c["d0"] > 0)
+    assert PL.canonical_key(plan) is None
+    keyed = PL.Select(PL.Scan(0), lambda c: c["d0"] > 0, key="pos")
+    assert PL.canonical_key(keyed) is not None
+
+
+def test_identity_key_stable_for_recreated_lambda():
+    """The serving pattern: a client re-builds the same query, re-creating
+    the inline lambda — same code object, same captured objects -> same
+    identity key (cache-hot)."""
+    def build(pred):
+        return PL.Select(PL.Scan(0), pred)
+
+    def make():
+        return lambda c: c["d0"] > 0.0
+
+    k1, g1 = PL.identity_key(build(make()))
+    k2, g2 = PL.identity_key(build(make()))
+    assert k1 == k2
+    assert g1  # the code object rides along as a guard to pin
+
+
+def test_identity_key_differs_when_capture_changes():
+    def make(th):
+        return lambda c: c["d0"] > th
+
+    th_a, th_b = np.float32(1.0), np.float32(2.0)
+    k1, _ = PL.identity_key(PL.Select(PL.Scan(0), make(th_a)))
+    k2, _ = PL.identity_key(PL.Select(PL.Scan(0), make(th_b)))
+    k3, _ = PL.identity_key(PL.Select(PL.Scan(0), make(th_a)))
+    assert k1 != k2      # different captured object: different executable
+    assert k1 == k3      # same captured object: hit
+
+
+def test_identity_key_no_code_falls_back_to_object_id():
+    class Pred:
+        def __call__(self, c):
+            return c["d0"] > 0
+
+    p1, p2 = Pred(), Pred()
+    k1, g1 = PL.identity_key(PL.Select(PL.Scan(0), p1))
+    k2, _ = PL.identity_key(PL.Select(PL.Scan(0), p2))
+    assert k1 != k2
+    assert p1 in g1  # the callable itself is the guard
+
+
+# --- LRU admission / eviction -------------------------------------------------
+
+
+def test_lru_evicts_least_recently_used_first():
+    c = PlanCache(max_entries=3)
+    for k in "abc":
+        c.put(k, k.upper())
+    assert c.get("a") == "A"      # refresh 'a': 'b' is now LRU
+    c.put("d", "D")               # evicts 'b'
+    assert "b" not in c and "a" in c and "c" in c and "d" in c
+    assert c.evictions == 1
+    # recompile accounting: a miss on the evicted key counts
+    assert c.get("b") is None
+    assert c.recompiles == 1
+    # a miss on a never-admitted key does NOT
+    assert c.get("z") is None
+    assert c.recompiles == 1
+
+
+def test_weight_budget_evicts_until_under():
+    c = PlanCache(max_entries=100, max_weight=10)
+    c.put("a", 1, weight=4)
+    c.put("b", 2, weight=4)
+    c.put("c", 3, weight=4)       # 12 > 10: evicts 'a'
+    assert "a" not in c and c.weight == 8
+    c.put("big", 4, weight=40)    # over budget alone: keeps only itself
+    assert list(c.keys()) == ["big"]
+
+
+def test_put_replaces_and_stats_snapshot():
+    c = PlanCache(max_entries=4)
+    c.put("a", 1, weight=2)
+    c.put("a", 2, weight=5)       # replace: weight updated, no growth
+    assert len(c) == 1 and c.weight == 5 and c.get("a") == 2
+    s = c.stats()
+    assert s == {"entries": 1, "weight": 5, "hits": 1, "misses": 0,
+                 "evictions": 0, "recompiles": 0}
+
+
+def test_guard_death_invalidates_entry():
+    class Guard:
+        pass
+
+    c = PlanCache()
+    g = Guard()
+    c.put("k", "V", guards=(g,))
+    assert c.get("k") == "V"
+    # the cache pins the guard: external deletion alone cannot kill it
+    # while resident — simulate decay by dropping our ref AND the pin
+    entry_guards = c._entries["k"].guards
+    assert g in entry_guards
+    del g, entry_guards
+    c._entries["k"].guards = ()   # release the pin
+    import gc
+
+    gc.collect()
+    assert "k" not in c           # weakref callback invalidated the entry
+
+
+# --- context integration ------------------------------------------------------
+
+
+def _ctx_tables():
+    ctx = DistContext()
+    rng = np.random.default_rng(3)
+    t = Table.from_arrays({
+        "k": rng.integers(0, 16, 128).astype(np.int32),
+        "d0": rng.integers(-9, 9, 128).astype(np.float32)})
+    return ctx, ctx.scatter(t)
+
+
+def test_collect_uses_shared_plan_cache():
+    ctx, dt = _ctx_tables()
+    aggs = (("d0", "sum"),)
+    ctx.frame(dt).groupby("k", aggs).collect()
+    misses = ctx.cache_stats()["misses"]
+    ctx.frame(dt).groupby("k", aggs).collect()   # fresh frame, same shape
+    s = ctx.cache_stats()
+    assert s["misses"] == misses and s["hits"] >= 1
+
+
+def test_keyless_lambda_cached_by_identity():
+    """The PR's perf fix: a keyless Select no longer re-jits per collect."""
+    ctx, dt = _ctx_tables()
+
+    def q():
+        return ctx.frame(dt).select(lambda c: c["d0"] > 0.0)
+
+    q().collect()
+    misses = ctx.cache_stats()["misses"]
+    out = q().collect()                         # re-created lambda: hit
+    s = ctx.cache_stats()
+    assert s["misses"] == misses, s
+    assert int(out.global_rows()) > 0
+
+
+def test_safe_capacity_entries_use_distinct_keys():
+    """One logical plan, two executables: the sized first pass and the
+    safe-capacity retry must never collide in the cache."""
+    ctx = DistContext()
+    p = ctx.num_shards
+    n = 256
+    t = Table.from_arrays({
+        "k": np.zeros(n, np.int32),
+        "d0": np.arange(n, dtype=np.float32)})
+    dt = ctx.analyze(ctx.scatter(t))
+    out, _ = ctx.partition_by(dt, "k")
+    namespaces = {k[0][0] for k in ctx.plan_cache.keys()}
+    if ctx.overflow_retries:     # estimates failed: both variants resident
+        assert "plan-safe" in namespaces, namespaces
+    assert "plan" in namespaces, namespaces
+    got = out.to_table().to_numpy()
+    assert np.array_equal(np.sort(got["d0"]), np.arange(n, dtype=np.float32))
+
+
+def test_interleaved_collect_async_bit_identical_to_sequential():
+    """N interleaved async clients == sequential collects, per query."""
+    ctx, dt = _ctx_tables()
+    sess = ServingSession(ctx)
+    sess.register("t", dt, analyze=True)
+    workload = [
+        ("gb", lambda s: s.frame("t").groupby("k", (("d0", "sum"),))),
+        ("topn", lambda s: s.frame("t").sort("k").limit(8)),
+        ("sel", lambda s: s.frame("t").select(lambda c: c["d0"] > 0.0)
+            .groupby("k", (("d0", "mean"),))),
+    ]
+    seq_rep, seq = sess.run_open_loop(workload, num_clients=2,
+                                      queries_per_client=3,
+                                      mode="sequential")
+    asy_rep, asy = sess.run_open_loop(workload, num_clients=2,
+                                      queries_per_client=3, mode="async")
+    assert seq_rep.shapes == asy_rep.shapes
+    assert all(tables_bitwise_equal(a.to_table(), b.to_table())
+               for a, b in zip(asy, seq))
+    assert asy_rep.compiles == 0 and asy_rep.recompiles == 0
+    assert len(asy) == seq_rep.num_queries == 6
+
+
+def test_future_resolves_once_and_drain():
+    ctx, dt = _ctx_tables()
+    fut = ctx.frame(ctx.analyze(dt)).groupby(
+        "k", (("d0", "sum"),)).collect_async()
+    out1 = fut.result()
+    assert fut.done
+    assert fut.result() is out1      # idempotent, no re-execution
+    # drain() clears any pending deferred verifications
+    ctx.frame(ctx.analyze(dt)).sort("k").collect_async()
+    ctx.drain()
+    assert ctx._pending == []
+
+
+def test_run_open_loop_rejects_bad_mode():
+    ctx, dt = _ctx_tables()
+    sess = ServingSession(ctx)
+    sess.register("t", dt)
+    with pytest.raises(AssertionError):
+        sess.run_open_loop([("q", lambda s: s.frame("t").sort("k"))],
+                           mode="threaded")
