@@ -89,8 +89,8 @@ def _worker_main(argv) -> None:
     sess.register("dims", dims, analyze=True)
 
     # mixed plan shapes; 'sel' uses an inline keyless lambda on purpose —
-    # the serving cache must keep a re-created lambda hot (code-identity
-    # keys), or every client submission would recompile it
+    # the serving cache must keep a re-created lambda hot (content keys
+    # over code + captures), or every client submission would recompile it
     workload = [
         ("gb", lambda s: s.frame("orders")
             .groupby("k", (("d0", "sum"), ("d0", "count")))),

@@ -32,6 +32,7 @@ communication-layer abstraction, preserved.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import weakref
 from typing import Callable, Sequence
 
@@ -142,6 +143,7 @@ class PlanFuture:
         self._finalize = finalize
         self._overflow = tuple(overflow_arrays)
         self._out = None
+        self._lock = threading.Lock()  # resolve-once under concurrent result()
 
     @property
     def done(self) -> bool:
@@ -162,9 +164,13 @@ class PlanFuture:
     def result_with_stats(self):
         """Verified ``(DistTable, per-shuffle stats)`` — blocks on the
         overflow check (and runs the late safe retry) the first time."""
-        if self._out is None:
-            self._out = self._finalize()
-            self._finalize = None  # drop plan/table refs once resolved
+        with self._lock:
+            if self._out is None:
+                self._out = self._finalize()
+                # drop plan/table refs AND the overflow counters once
+                # resolved: a retained future must not pin device buffers
+                self._finalize = None
+                self._overflow = ()
         return self._out
 
     def result(self) -> DistTable:
@@ -203,6 +209,10 @@ class DistContext:
         # in-flight futures with deferred overflow verification; weakly
         # held so an abandoned future never pins its tables
         self._pending: list = []
+        # guards _pending / _overflow_bad / overflow_retries: submit and
+        # result() may be called from multiple client threads. Reentrant
+        # because a finalize running under it may fold further bookkeeping.
+        self._lock = threading.RLock()
 
     # -- properties ---------------------------------------------------------
     @property
@@ -339,14 +349,13 @@ class DistContext:
         this before and after a run to assert 0 recompiles."""
         return self.plan_cache.stats()
 
-    def _run(self, key, body: Callable, tabs: Sequence[DistTable],
-             guards: tuple = ()):
+    def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
         """Execute per-shard `body` over DistTables under shard_map + jit.
 
-        ``key`` controls the executable cache (None -> never cached);
-        ``guards`` are objects whose identity the key embeds (keyless
-        user lambdas) — the cache pins them so their ids stay valid for
-        the entry's lifetime.
+        ``key`` controls the executable cache: None -> never cached (a
+        plan neither canonical- nor content-keyable re-traces per call —
+        always correct). The key's own tuples strongly pin any objects
+        whose equality the lookup relies on.
         """
         global_fn = self._make_global(body)
         args = tuple((t.columns, t.row_counts) for t in tabs)
@@ -358,7 +367,7 @@ class DistContext:
             jitted = self.plan_cache.get(sig)
             if jitted is None:
                 jitted = jax.jit(global_fn)
-                self.plan_cache.put(sig, jitted, guards=guards)
+                self.plan_cache.put(sig, jitted)
             cols, rc, stats = jitted(*args)
         else:
             cols, rc, stats = jax.jit(global_fn)(*args)
@@ -372,9 +381,11 @@ class DistContext:
         serving path. The single execution pipeline is unchanged:
         (optionally optimized) plan -> one shard_map body -> jit keyed by
         the canonical plan in :attr:`plan_cache`; plans containing keyless
-        user lambdas fall back to identity keys (``PL.identity_key``)
-        whose callables the cache pins, so even ad-hoc predicates stop
-        re-jitting per call.
+        user lambdas fall back to content keys (``PL.identity_key`` — the
+        code object plus the values of its captures/defaults/referenced
+        globals), so ad-hoc predicates stop re-jitting per call while a
+        rebound global or changed capture still misses. Predicates that
+        cannot be safely content-keyed are simply never cached.
 
         ``report``, when given, receives one static record per potential
         shuffle at TRACE time — a jit-cache hit leaves it empty (use
@@ -420,10 +431,13 @@ class DistContext:
                 part, fingerprint=fresh_range_fingerprint())
         key = PL.canonical_key(plan)
         if key is None:
-            ikey, guards = PL.identity_key(plan)
-            run_key, run_guards = ("plan-id", ikey), guards
+            # content-based fallback for keyless user lambdas; None when
+            # the plan cannot be safely keyed (opaque callable, unhashable
+            # capture) — _run then skips the cache entirely
+            ikey = PL.identity_key(plan)
+            run_key = ("plan-id", ikey) if ikey is not None else None
         else:
-            run_key, run_guards = ("plan", key), ()
+            run_key = ("plan", key)
         sized = have_stats and PL.plan_cost_sized(plan)
 
         def run_safe():
@@ -434,19 +448,22 @@ class DistContext:
                 safe_plan = PL.apply_cost_model(logical, schemas, p, None)
             safe_key = PL.canonical_key(safe_plan)
             if safe_key is None:
-                s_ikey, s_guards = PL.identity_key(safe_plan)
-                safe_run_key = ("plan-safe-id", s_ikey)
+                s_ikey = PL.identity_key(safe_plan)
+                safe_run_key = ("plan-safe-id", s_ikey) \
+                    if s_ikey is not None else None
             else:
-                safe_run_key, s_guards = ("plan-safe", safe_key), ()
+                safe_run_key = ("plan-safe", safe_key)
 
             def safe_body(*tables):
                 return PL.execute_plan(
                     safe_plan, tables, axis_name=self.axis_name,
                     num_shards=p, safe_capacity=True)
 
-            return self._run(safe_run_key, safe_body, tabs, guards=s_guards)
+            return self._run(safe_run_key, safe_body, tabs)
 
-        bad_estimates = sized and run_key in self._overflow_bad
+        with self._lock:
+            bad_estimates = sized and run_key is not None \
+                and run_key in self._overflow_bad
         if bad_estimates:
             out, stats = run_safe()  # this plan's estimates already failed
         else:
@@ -455,7 +472,7 @@ class DistContext:
                                        axis_name=self.axis_name,
                                        num_shards=p, report=report)
 
-            out, stats = self._run(run_key, body, tabs, guards=run_guards)
+            out, stats = self._run(run_key, body, tabs)
 
         def finalize():
             nonlocal out, stats, bad_estimates
@@ -467,8 +484,10 @@ class DistContext:
                                for s, m in zip(stats, mask) if m)
                 if overflow > 0:  # late safe-capacity retry
                     bad_estimates = True
-                    self.overflow_retries += 1
-                    self._overflow_bad.add(run_key)
+                    with self._lock:
+                        self.overflow_retries += 1
+                        if run_key is not None:
+                            self._overflow_bad.add(run_key)
                     out, stats = run_safe()
             est = None
             if have_stats and not bad_estimates:
@@ -483,16 +502,21 @@ class DistContext:
         fut = PlanFuture(finalize, overflow_arrays)
         self._fold_pending(skip=fut)
         if overflow_arrays:
-            self._pending.append(weakref.ref(fut))
+            with self._lock:
+                self._pending.append(weakref.ref(fut))
         return fut
 
     def _fold_pending(self, skip: PlanFuture | None = None):
         """Verify earlier futures whose overflow counters are already
         device-ready — the deferred check folded into this dispatch at
         zero sync cost. Dropped or resolved futures fall out of the list;
-        a future whose counters are still in flight stays deferred."""
+        a future whose counters are still in flight stays deferred.
+        The pending list is swapped out under the lock and resolved
+        outside it (resolution may itself dispatch a safe retry)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
         still = []
-        for ref in self._pending:
+        for ref in pending:
             f = ref()
             if f is None or f.done or f is skip:
                 continue
@@ -500,16 +524,18 @@ class DistContext:
                 f.result_with_stats()
             else:
                 still.append(ref)
-        self._pending = still
+        with self._lock:
+            self._pending.extend(still)
 
     def drain(self):
         """Block until every outstanding future is verified (the explicit
         end-of-batch sync for fire-and-forget submitters)."""
-        for ref in self._pending:
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for ref in pending:
             f = ref()
             if f is not None:
                 f.result_with_stats()
-        self._pending = []
 
     def _run_plan(self, plan: PL.Node, tabs: Sequence[DistTable], *,
                   optimize: bool = False, report: list | None = None):

@@ -58,6 +58,7 @@ pipeline re-collected every training step compiles exactly once.
 from __future__ import annotations
 
 import dataclasses
+import types
 from dataclasses import dataclass, field, replace
 from typing import Callable, Sequence
 
@@ -1015,48 +1016,91 @@ def canonical_key(plan: Node):
         return None
 
 
-def identity_key(plan: Node) -> tuple[object, tuple]:
+def identity_key(plan: Node):
     """Fallback cache key for plans :func:`canonical_key` rejects: keyless
-    predicates are keyed by OBJECT IDENTITY instead of a user-supplied
-    key. Returns ``(key, guards)`` where ``guards`` are the objects whose
-    ids the key embeds — an id is only meaningful while its object lives,
-    so the cache must pin the guards for the entry's lifetime
-    (``repro.core.plan_cache.PlanCache`` does).
+    predicates are keyed by the CONTENT of everything that parameterizes
+    their behavior, or the plan is not cached at all. Returns the hashable
+    key, or ``None`` when any keyless callable cannot be safely
+    content-keyed — such plans are never cached and re-trace on every
+    dispatch (the pre-cache semantics: always correct, just slower).
 
-    The identity used is the predicate's ``__code__`` object plus the
-    identities of everything that parameterizes its behavior (captured
-    closure cells, defaults, globals dict). A lambda is re-created on
-    every pass through its definition site but its code object is built
-    ONCE at compile time — so the common serving pattern of clients
-    re-building structurally identical queries with inline lambdas stays
-    cache-hot, while a lambda capturing a *different* object (changed
-    closure state) misses and compiles its own entry. Callables without
-    ``__code__`` fall back to the object's own id.
+    The key embeds the predicate's ``__code__`` object (CPython compares
+    code objects by content, so a lambda re-created on every pass through
+    its definition site — the common serving pattern — still hits) plus
+    the *values* of its captured closure cells, ``__defaults__``,
+    ``__kwdefaults__``, and every global its code references (recursively
+    through nested code objects). Cache lookup compares these values by
+    ``==``, and the cache's key tuple strongly pins them, so:
+
+    * rebinding a module-level global the predicate reads changes the key
+      (miss -> recompile with the new value);
+    * a captured or referenced UNHASHABLE value (list, dict, ndarray —
+      anything mutable-by-design) makes the plan uncacheable;
+    * a dead value's id can never be recycled into a false hit (the key
+      itself keeps it alive while the entry is resident).
+
+    REMAINING ALIASING HAZARD (the documented contract): a captured
+    object whose ``__hash__``/``__eq__`` are identity-based (the
+    ``object`` defaults) but which carries mutable state compares equal
+    to itself after in-place mutation — the cache cannot see such
+    mutation and will reuse the executable traced with the old state.
+    Plain values (numbers, strings, tuples, frozen dataclasses) are
+    always safe; predicates closing over mutable identity-hashed objects
+    must either mutate by REBINDING (which changes the key) or use an
+    explicit user ``key=`` covering the state.
     """
-    guards: list = []
-    key = _canon(plan, guards)
-    return key, tuple(guards)
-
-
-def _identity_of(predicate, guards: list):
-    """Hashable behavior-identity of a keyless callable (see
-    :func:`identity_key`); appends the id-bearing objects to ``guards``."""
-    code = getattr(predicate, "__code__", None)
     try:
-        cells = tuple(c.cell_contents
+        return _canon(plan, identity=True)
+    except _Uncacheable:
+        return None
+
+
+def _value_token(v):
+    """Content token for a value a keyless predicate's behavior depends on
+    (closure cell, default, referenced global). The value itself rides in
+    the key — equality is by content for hashable values; unhashable
+    values (the mutable-in-place hazard class) reject caching."""
+    try:
+        hash(v)
+    except TypeError:
+        raise _Uncacheable from None
+    return (type(v), v)
+
+
+def _referenced_names(code) -> set:
+    """Every name ``code`` (or a code object nested in its constants —
+    inner lambdas, pre-3.12 comprehensions) can look up as a global.
+    Over-approximate: ``co_names`` also holds attribute names, which at
+    worst add spurious key components, never a false hit."""
+    names = set(code.co_names)
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            names |= _referenced_names(const)
+    return names
+
+
+def _identity_of(predicate):
+    """Hashable behavior-content of a keyless callable (see
+    :func:`identity_key`); raises :class:`_Uncacheable` for opaque
+    callables (no ``__code__``) and unhashable parameter values."""
+    code = getattr(predicate, "__code__", None)
+    if code is None:  # opaque callable: no visible behavior content
+        raise _Uncacheable
+    try:
+        cells = tuple(_value_token(c.cell_contents)
                       for c in getattr(predicate, "__closure__", None) or ())
-    except ValueError:  # unfilled cell (self-referential def): no identity
-        code = None
-    if code is None:
-        guards.append(predicate)
-        return ("@id", id(predicate))
-    defaults = tuple(getattr(predicate, "__defaults__", None) or ())
-    guards.append(code)
-    guards.extend(cells)
-    guards.extend(defaults)
-    return ("@code", id(code), tuple(id(c) for c in cells),
-            tuple(id(d) for d in defaults),
-            id(getattr(predicate, "__globals__", None)))
+    except ValueError:  # unfilled cell (self-referential def)
+        raise _Uncacheable from None
+    defaults = tuple(_value_token(d)
+                     for d in getattr(predicate, "__defaults__", None) or ())
+    kwdefaults = tuple(
+        (n, _value_token(v)) for n, v in
+        sorted((getattr(predicate, "__kwdefaults__", None) or {}).items()))
+    gl = getattr(predicate, "__globals__", None) or {}
+    globals_used = tuple(
+        (n, _value_token(gl[n])) if n in gl else (n, "@absent")
+        for n in sorted(_referenced_names(code)))
+    return ("@code", code, cells, defaults, kwdefaults, globals_used)
 
 
 def _predicate_fingerprint(predicate):
@@ -1071,26 +1115,26 @@ def _predicate_fingerprint(predicate):
     return (code.co_code, tuple(map(str, code.co_consts)), code.co_names)
 
 
-def _canon(node: Node, guards: list | None = None):
+def _canon(node: Node, identity: bool = False):
     name = type(node).__name__
     if isinstance(node, Scan):
         return (name, node.slot)
     if isinstance(node, Select):
         if node.key is None:
-            if guards is None:
+            if not identity:
                 raise _Uncacheable
-            key = _identity_of(node.predicate, guards)
+            key = _identity_of(node.predicate)
         else:
             key = node.key
         return (name, key, _predicate_fingerprint(node.predicate),
-                node.columns, _canon(node.child, guards))
+                node.columns, _canon(node.child, identity))
     vals = []
     for f in dataclasses.fields(node):
         v = getattr(node, f.name)
         if isinstance(v, Node) or callable(v):
             continue
         vals.append((f.name, v))
-    return (name, tuple(vals)) + tuple(_canon(c, guards)
+    return (name, tuple(vals)) + tuple(_canon(c, identity)
                                        for c in children(node))
 
 

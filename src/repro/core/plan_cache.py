@@ -15,26 +15,41 @@ makes that cache first-class:
   the signal that the budgets are too small for the working set), surfaced
   through :meth:`stats` and re-exported as
   ``DistContext.cache_stats()`` for the serving benchmark's warm-path
-  "0 recompiles" gate.
-* **Identity-keyed entries with guards** — plans containing keyless user
-  lambdas cannot be canonicalized, so they are keyed by the *object
-  identity* of their callables (``plan.identity_key``). An ``id()`` is
-  only meaningful while the object lives; the cache therefore pins each
-  guard object for the lifetime of its entry (so the id cannot be
-  recycled into a false hit) and additionally registers a weakref
-  callback that invalidates the entry should a guard die while the entry
-  is still resident. Eviction releases the pin — memory is bounded by
-  the LRU budgets, not by user-lambda lifetimes.
+  "0 recompiles" gate. Recompile detection keeps a bounded set of key
+  HASHES (not the keys themselves — a full key retains the whole nested
+  canonical-plan tuple), so the accounting side-structure cannot leak
+  over an open-ended key mix; rare hash collisions only perturb a
+  counter, never a lookup.
+* **Content-keyed keyless plans** — plans containing keyless user lambdas
+  cannot be canonicalized; ``plan.identity_key`` keys them by the CONTENT
+  of the code object and every value the predicate's behavior depends on
+  (captures, defaults, referenced globals). The key tuple itself strongly
+  pins those objects while the entry is resident, so equality stays
+  meaningful for the entry's lifetime; plans that cannot be safely
+  content-keyed are never cached at all. ``guards=`` remains available
+  for callers that key on object identity explicitly: guard objects are
+  pinned while cached and a weakref callback invalidates the entry
+  should a guard die while resident.
 
 Safe-capacity recompiles are cached under their own namespace by the
 caller (``("plan-safe", ...)`` vs ``("plan", ...)``), so the sized and
 conservative executables of one logical plan never collide.
+
+All mutating operations take an internal re-entrant lock, so concurrent
+client threads sharing one ``DistContext`` cannot corrupt the LRU order
+or the counters (two racing misses may both compile; the second ``put``
+wins — wasted work, never a wrong result).
 """
 from __future__ import annotations
 
+import threading
 import weakref
 from collections import OrderedDict
 from typing import Iterable
+
+# recompile accounting remembers at most this many distinct key hashes;
+# keys seen beyond the cap simply stop counting as recompiles on re-miss
+_EVER_CAP = 1 << 16
 
 
 class _Entry:
@@ -57,7 +72,8 @@ class PlanCache:
         self.max_weight = max_weight
         self._entries: OrderedDict[object, _Entry] = OrderedDict()
         self._weight = 0
-        self._ever: set = set()  # keys that were admitted at least once
+        self._ever: set[int] = set()  # hashes of keys admitted at least once
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -75,63 +91,75 @@ class PlanCache:
         return self._weight
 
     def keys(self) -> Iterable:
-        return list(self._entries.keys())
+        with self._lock:
+            return list(self._entries.keys())
 
     def stats(self) -> dict:
         """Counter snapshot (plain ints — JSON-serializable)."""
-        return {"entries": len(self._entries), "weight": self._weight,
-                "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "recompiles": self.recompiles}
+        with self._lock:
+            return {"entries": len(self._entries), "weight": self._weight,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "recompiles": self.recompiles}
 
     # -- the cache protocol --------------------------------------------------
     def get(self, key):
         """The cached executable, or None. Counts hit/miss and refreshes
         recency; a miss on a previously-admitted key counts a recompile."""
-        entry = self._entries.get(key)
-        if entry is None:
-            self.misses += 1
-            if key in self._ever:
-                self.recompiles += 1
-            return None
-        self.hits += 1
-        self._entries.move_to_end(key)
-        return entry.value
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                if hash(key) in self._ever:
+                    self.recompiles += 1
+                return None
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry.value
 
     def put(self, key, value, *, weight: int = 1, guards: tuple = ()):
         """Admit ``value`` under ``key``, evicting LRU entries over budget.
 
-        ``guards``: objects whose identity the key depends on (keyless
-        predicates keyed by ``id()``). They are pinned while the entry is
-        resident and the entry dies with them — never a stale-id hit.
+        ``guards``: objects whose identity the key depends on. They are
+        pinned while the entry is resident and the entry dies with them —
+        never a stale-id hit. (Content-keyed plans need no guards: the
+        key tuple itself pins its values.)
         """
-        old = self._entries.pop(key, None)
-        if old is not None:
-            self._weight -= old.weight
-        entry = _Entry(value, weight, tuple(guards))
-        self._entries[key] = entry
-        self._weight += weight
-        self._ever.add(key)
-        for g in entry.guards:
-            try:
-                entry.refs.append(
-                    weakref.ref(g, lambda _, k=key: self.invalidate(k)))
-            except TypeError:  # not weakref-able: the strong pin suffices
-                pass
-        self._evict_over_budget(keep=key)
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._weight -= old.weight
+            entry = _Entry(value, weight, tuple(guards))
+            self._entries[key] = entry
+            self._weight += weight
+            if len(self._ever) < _EVER_CAP:
+                self._ever.add(hash(key))
+            for g in entry.guards:
+                try:
+                    entry.refs.append(
+                        weakref.ref(g, lambda _, k=key: self.invalidate(k)))
+                except TypeError:  # not weakref-able: the strong pin suffices
+                    pass
+            self._evict_over_budget(keep=key)
 
     def invalidate(self, key) -> bool:
         """Drop ``key`` if resident (guard death / explicit flush)."""
-        entry = self._entries.pop(key, None)
-        if entry is None:
-            return False
-        self._weight -= entry.weight
-        self.evictions += 1
-        return True
+        with self._lock:
+            entry = self._entries.pop(key, None)
+            if entry is None:
+                return False
+            self._weight -= entry.weight
+            self.evictions += 1
+            return True
 
     def clear(self):
-        self.evictions += len(self._entries)
-        self._entries.clear()
-        self._weight = 0
+        """Explicit flush: drops every entry AND the recompile-accounting
+        hash set (a fresh cache starts with fresh accounting)."""
+        with self._lock:
+            self.evictions += len(self._entries)
+            self._entries.clear()
+            self._weight = 0
+            self._ever.clear()
 
     def _evict_over_budget(self, keep):
         while len(self._entries) > self.max_entries or (

@@ -41,8 +41,8 @@ from repro.core.frame import LazyFrame
 from repro.core.table import Table
 
 # one workload entry: (label, builder); the builder receives the session
-# and returns the LazyFrame to execute — closed over once at definition
-# time, so even keyless lambdas inside it stay cache-hot (identity keys)
+# and returns the LazyFrame to execute — keyless lambdas inside it stay
+# cache-hot because the plan cache content-keys their code + captures
 QueryBuilder = Callable[["ServingSession"], LazyFrame]
 
 
@@ -103,7 +103,19 @@ class ServingReport:
 
 
 class ServingSession:
-    """Named shared tables + async dispatch + the open-loop driver."""
+    """Named shared tables + async dispatch + the open-loop driver.
+
+    Concurrency contract: the N clients of :meth:`run_open_loop` are
+    LOGICAL — one driver thread interleaves their submissions (an open
+    loop measures queueing/overlap, not thread parallelism). Calling
+    :meth:`submit` / ``future.result()`` from real threads is also safe
+    for the shared bookkeeping — the plan cache and the context's
+    deferred-verification list are internally locked, and a future
+    resolves exactly once — but the catalog (:meth:`register`) must be
+    populated before concurrent submission starts, and two racing misses
+    on one plan shape may both compile it (the second wins; wasted work,
+    never a wrong result).
+    """
 
     def __init__(self, ctx: DistContext, *, max_in_flight: int = 32):
         assert max_in_flight >= 1, max_in_flight

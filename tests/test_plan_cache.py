@@ -2,11 +2,13 @@
 
 Covers the serving-path cache contracts: canonical-key stability across
 structurally-equal plans, LRU admission/eviction order and budgets,
-recompile accounting, identity keys for keyless user lambdas (code-object
-keys: a re-created lambda from the same definition site hits, a changed
-captured object misses), guard pinning/invalidation, safe-capacity
-variants under distinct key namespaces, and interleaved ``collect_async``
-futures resolving bit-identical to sequential ``collect`` calls.
+recompile accounting, content keys for keyless user lambdas (a re-created
+lambda from the same definition site hits; a changed capture, rebound
+global, or differing kw-only default misses; unhashable captures and
+opaque callables stay uncached), guard pinning/invalidation,
+safe-capacity variants under distinct key namespaces, and interleaved
+``collect_async`` futures resolving bit-identical to sequential
+``collect`` calls.
 
 Deliberately hypothesis-free: part of the minimal-environment tier-1 gate.
 """
@@ -52,18 +54,17 @@ def test_canonical_key_rejects_keyless_select():
 
 def test_identity_key_stable_for_recreated_lambda():
     """The serving pattern: a client re-builds the same query, re-creating
-    the inline lambda — same code object, same captured objects -> same
-    identity key (cache-hot)."""
+    the inline lambda — same code content, same captured values -> same
+    content key (cache-hot)."""
     def build(pred):
         return PL.Select(PL.Scan(0), pred)
 
     def make():
         return lambda c: c["d0"] > 0.0
 
-    k1, g1 = PL.identity_key(build(make()))
-    k2, g2 = PL.identity_key(build(make()))
-    assert k1 == k2
-    assert g1  # the code object rides along as a guard to pin
+    k1 = PL.identity_key(build(make()))
+    k2 = PL.identity_key(build(make()))
+    assert k1 is not None and k1 == k2
 
 
 def test_identity_key_differs_when_capture_changes():
@@ -71,23 +72,65 @@ def test_identity_key_differs_when_capture_changes():
         return lambda c: c["d0"] > th
 
     th_a, th_b = np.float32(1.0), np.float32(2.0)
-    k1, _ = PL.identity_key(PL.Select(PL.Scan(0), make(th_a)))
-    k2, _ = PL.identity_key(PL.Select(PL.Scan(0), make(th_b)))
-    k3, _ = PL.identity_key(PL.Select(PL.Scan(0), make(th_a)))
-    assert k1 != k2      # different captured object: different executable
-    assert k1 == k3      # same captured object: hit
+    k1 = PL.identity_key(PL.Select(PL.Scan(0), make(th_a)))
+    k2 = PL.identity_key(PL.Select(PL.Scan(0), make(th_b)))
+    k3 = PL.identity_key(PL.Select(PL.Scan(0), make(th_a)))
+    assert k1 != k2      # different captured value: different executable
+    assert k1 == k3      # same captured value: hit
 
 
-def test_identity_key_no_code_falls_back_to_object_id():
+_G_THRESH = 1.0
+
+
+def test_identity_key_sees_global_rebinding():
+    """A lambda reading a module-level global must MISS once the global is
+    rebound — identical ids of ``__globals__`` are not enough (the stale-
+    result hazard the content key exists to close)."""
+    global _G_THRESH
+
+    def make():
+        return lambda c: c["d0"] > _G_THRESH
+
+    k1 = PL.identity_key(PL.Select(PL.Scan(0), make()))
+    _G_THRESH = 2.0
+    try:
+        k2 = PL.identity_key(PL.Select(PL.Scan(0), make()))
+    finally:
+        _G_THRESH = 1.0
+    k3 = PL.identity_key(PL.Select(PL.Scan(0), make()))
+    assert k1 != k2      # rebound global: recompile with the new value
+    assert k1 == k3      # restored: hit again
+
+
+def test_identity_key_distinguishes_kwonly_defaults():
+    """Factory-made predicates sharing one code object but differing only
+    in kw-only defaults must not collide."""
+    def make(t):
+        return lambda c, *, _t=t: c["d0"] > _t
+
+    k1 = PL.identity_key(PL.Select(PL.Scan(0), make(np.float32(1.0))))
+    k2 = PL.identity_key(PL.Select(PL.Scan(0), make(np.float32(2.0))))
+    k3 = PL.identity_key(PL.Select(PL.Scan(0), make(np.float32(1.0))))
+    assert k1 != k2 and k1 == k3
+
+
+def test_identity_key_rejects_unhashable_capture():
+    """Mutable-in-place values (ndarray, list) cannot be content-keyed:
+    the plan stays uncached and re-traces per dispatch (always correct)."""
+    arr = np.zeros(4, np.float32)
+    assert PL.identity_key(
+        PL.Select(PL.Scan(0), lambda c: c["d0"] > arr[0])) is None
+    lst = [0.0]
+    assert PL.identity_key(
+        PL.Select(PL.Scan(0), lambda c: c["d0"] > lst[0])) is None
+
+
+def test_identity_key_rejects_opaque_callable():
     class Pred:
         def __call__(self, c):
             return c["d0"] > 0
 
-    p1, p2 = Pred(), Pred()
-    k1, g1 = PL.identity_key(PL.Select(PL.Scan(0), p1))
-    k2, _ = PL.identity_key(PL.Select(PL.Scan(0), p2))
-    assert k1 != k2
-    assert p1 in g1  # the callable itself is the guard
+    assert PL.identity_key(PL.Select(PL.Scan(0), Pred())) is None
 
 
 # --- LRU admission / eviction -------------------------------------------------
@@ -127,6 +170,16 @@ def test_put_replaces_and_stats_snapshot():
     s = c.stats()
     assert s == {"entries": 1, "weight": 5, "hits": 1, "misses": 0,
                  "evictions": 0, "recompiles": 0}
+
+
+def test_clear_resets_recompile_accounting():
+    c = PlanCache()
+    c.put("a", 1)
+    c.clear()
+    assert len(c) == 0 and c.evictions == 1
+    # a fresh cache starts with fresh accounting: no phantom recompile
+    assert c.get("a") is None
+    assert c.recompiles == 0 and c.misses == 1
 
 
 def test_guard_death_invalidates_entry():
@@ -184,6 +237,46 @@ def test_keyless_lambda_cached_by_identity():
     s = ctx.cache_stats()
     assert s["misses"] == misses, s
     assert int(out.global_rows()) > 0
+
+
+_SERVE_THRESH = 0.0
+
+
+def test_keyless_lambda_global_rebinding_stays_correct():
+    """Rebinding a module global a cached keyless predicate reads must not
+    serve stale results — the high-severity hazard of id-based keys."""
+    global _SERVE_THRESH
+    ctx, dt = _ctx_tables()
+
+    def q():
+        return ctx.frame(dt).select(lambda c: c["d0"] > _SERVE_THRESH)
+
+    a = q().collect()
+    a2 = q().collect()               # unchanged global: cache-hit, same rows
+    _SERVE_THRESH = 5.0
+    try:
+        b = q().collect()
+    finally:
+        _SERVE_THRESH = 0.0
+    assert int(a.global_rows()) == int(a2.global_rows())
+    assert int(b.global_rows()) < int(a.global_rows())  # new value honored
+
+
+def test_keyless_unhashable_capture_runs_uncached_and_fresh():
+    """An ndarray capture cannot be content-keyed: every collect re-traces
+    (no cache entry) and in-place mutation is therefore always visible."""
+    ctx, dt = _ctx_tables()
+    th = np.zeros((), np.float32)
+
+    def q():
+        return ctx.frame(dt).select(lambda c: c["d0"] > th)
+
+    entries_before = ctx.cache_stats()["entries"]
+    a = q().collect()
+    assert ctx.cache_stats()["entries"] == entries_before  # never admitted
+    th += 5.0                        # in-place mutation, same object id
+    b = q().collect()
+    assert int(b.global_rows()) < int(a.global_rows())
 
 
 def test_safe_capacity_entries_use_distinct_keys():
