@@ -10,6 +10,7 @@ Sections:
   groupby strategies: shuffle vs two-phase (bench_groupby)
   lazy plan fusion: fused vs eager ETL chain (bench_plan)
   sort->join chains: range provenance vs re-shuffling (bench_sort_chain)
+  staged shuffles: pipelined AllToAll vs monolithic (bench_shuffle)
   cost-model planning: stats-driven strategy + sizing (bench_cost)
   window functions: boundary-carry elision vs re-shuffle (bench_window)
   concurrent-query serving: cache warmth x dispatch mode (bench_serving)
@@ -42,8 +43,9 @@ def main() -> None:
     t0 = time.perf_counter()
     from benchmarks import (bench_binding_overhead, bench_cost,
                             bench_groupby, bench_kernels, bench_plan,
-                            bench_scaling, bench_serving, bench_sort_chain,
-                            bench_vs_baselines, bench_window)
+                            bench_scaling, bench_serving, bench_shuffle,
+                            bench_sort_chain, bench_vs_baselines,
+                            bench_window)
 
     print(f"# benchmark run (quick={quick})")
     sections = [
@@ -53,6 +55,7 @@ def main() -> None:
         ("groupby", bench_groupby.main),
         ("plan", bench_plan.main),
         ("sort_chain", bench_sort_chain.main),
+        ("shuffle", bench_shuffle.main),
         ("cost", bench_cost.main),
         ("window", bench_window.main),
         ("serving", bench_serving.main),

@@ -567,55 +567,72 @@ class DistContext:
 
     # -- shuffle-based operators (paper §II-B-3..6, Fig. 3) -------------------
     def partition_by(self, t: DistTable, keys, *, seed: int = 7,
-                     bucket_capacity=None, report: list | None = None):
+                     bucket_capacity=None, stages: int | None = None,
+                     shuffle_mode: str = "alltoall",
+                     report: list | None = None):
         """Explicitly hash-repartition ``t`` on ``keys`` and tag the result.
 
         Pre-partition a dimension table once; every later join/groupby on
         ``keys`` (same seed) through :meth:`frame` elides its shuffle.
+        ``stages``/``shuffle_mode`` tune the shuffle pipeline (bit-
+        identical results for every setting; None = cost-model pick).
         """
         keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
         plan = PL.Repartition(PL.Scan(0), keys_t, seed=seed,
-                              bucket_capacity=bucket_capacity)
+                              bucket_capacity=bucket_capacity,
+                              stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [t], report=report)
 
     def join(self, left: DistTable, right: DistTable, on, *, how="inner",
              algorithm="sort", bucket_capacity=None, out_capacity=None,
-             seed: int = 7, report: list | None = None):
+             seed: int = 7, stages: int | None = None,
+             shuffle_mode: str = "alltoall", report: list | None = None):
         on_t = (on,) if isinstance(on, str) else tuple(on)
         plan = PL.Join(PL.Scan(0), PL.Scan(1), on_t, how=how,
                        algorithm=algorithm, bucket_capacity=bucket_capacity,
-                       out_capacity=out_capacity, seed=seed)
+                       out_capacity=out_capacity, seed=seed,
+                       stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [left, right], report=report)
 
     def union(self, a: DistTable, b: DistTable, *, bucket_capacity=None,
-              seed: int = 7, report: list | None = None):
+              seed: int = 7, stages: int | None = None,
+              shuffle_mode: str = "alltoall", report: list | None = None):
         plan = PL.Union(PL.Scan(0), PL.Scan(1),
-                        bucket_capacity=bucket_capacity, seed=seed)
+                        bucket_capacity=bucket_capacity, seed=seed,
+                        stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [a, b], report=report)
 
     def intersect(self, a: DistTable, b: DistTable, *, bucket_capacity=None,
-                  seed: int = 7, report: list | None = None):
+                  seed: int = 7, stages: int | None = None,
+                  shuffle_mode: str = "alltoall", report: list | None = None):
         plan = PL.Intersect(PL.Scan(0), PL.Scan(1),
-                            bucket_capacity=bucket_capacity, seed=seed)
+                            bucket_capacity=bucket_capacity, seed=seed,
+                            stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [a, b], report=report)
 
     def difference(self, a: DistTable, b: DistTable, *, mode="symmetric",
                    bucket_capacity=None, seed: int = 7,
+                   stages: int | None = None,
+                   shuffle_mode: str = "alltoall",
                    report: list | None = None):
         plan = PL.Difference(PL.Scan(0), PL.Scan(1),
                              bucket_capacity=bucket_capacity, seed=seed,
-                             mode=mode)
+                             mode=mode, stages=stages,
+                             shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [a, b], report=report)
 
     def distinct(self, a: DistTable, *, bucket_capacity=None, seed: int = 7,
+                 stages: int | None = None, shuffle_mode: str = "alltoall",
                  report: list | None = None):
         plan = PL.Distinct(PL.Scan(0), bucket_capacity=bucket_capacity,
-                           seed=seed)
+                           seed=seed, stages=stages,
+                           shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [a], report=report)
 
     def groupby(self, t: DistTable, keys, aggs, *, strategy: str = "auto",
                 bucket_capacity=None, partial_capacity: int | None = None,
                 out_capacity: int | None = None, seed: int = 7,
+                stages: int | None = None, shuffle_mode: str = "alltoall",
                 report: list | None = None):
         """Distributed GroupBy (strategy='auto' | 'two_phase' | 'shuffle').
 
@@ -633,11 +650,13 @@ class DistContext:
         plan = PL.GroupBy(PL.Scan(0), keys_t, pairs, strategy=strategy,
                           bucket_capacity=bucket_capacity,
                           partial_capacity=partial_capacity,
-                          out_capacity=out_capacity, seed=seed)
+                          out_capacity=out_capacity, seed=seed,
+                          stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [t], report=report)
 
     def sort(self, a: DistTable, by, *, bucket_capacity=None,
-             samples_per_shard: int = 64, report: list | None = None):
+             samples_per_shard: int = 64, stages: int | None = None,
+             shuffle_mode: str = "alltoall", report: list | None = None):
         """Global sort by one or more key columns (lexicographic order).
 
         The result carries a :class:`RangePartitioning` tag (splitter
@@ -647,11 +666,13 @@ class DistContext:
         """
         by_t = (by,) if isinstance(by, str) else tuple(by)
         plan = PL.Sort(PL.Scan(0), by_t, bucket_capacity=bucket_capacity,
-                       samples_per_shard=samples_per_shard)
+                       samples_per_shard=samples_per_shard,
+                       stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [a], report=report)
 
     def window(self, t: DistTable, by, funcs, *, order_by=(),
                bucket_capacity=None, samples_per_shard: int = 64,
+               stages: int | None = None, shuffle_mode: str = "alltoall",
                report: list | None = None):
         """Distributed window functions (rank/lag/running aggregates).
 
@@ -671,7 +692,8 @@ class DistContext:
         pairs = A.normalize_funcs(funcs)
         plan = PL.Window(PL.Scan(0), by_t, order_t, pairs,
                          bucket_capacity=bucket_capacity,
-                         samples_per_shard=samples_per_shard)
+                         samples_per_shard=samples_per_shard,
+                         stages=stages, shuffle_mode=shuffle_mode)
         return self._run_plan(plan, [t], report=report)
 
     def limit(self, t: DistTable, n: int, *, report: list | None = None

@@ -86,26 +86,32 @@ class LazyFrame:
         quota (one int32 per shard on the wire, no AllToAll)."""
         return self._chain(PL.Limit(self._plan, int(n)))
 
-    def partition_by(self, keys, *, seed: int = 7, bucket_capacity=None
-                     ) -> "LazyFrame":
+    def partition_by(self, keys, *, seed: int = 7, bucket_capacity=None,
+                     stages: int | None = None,
+                     shuffle_mode: str = "alltoall") -> "LazyFrame":
         keys_t = (keys,) if isinstance(keys, str) else tuple(keys)
         return self._chain(PL.Repartition(self._plan, keys_t, seed=seed,
-                                          bucket_capacity=bucket_capacity))
+                                          bucket_capacity=bucket_capacity,
+                                          stages=stages,
+                                          shuffle_mode=shuffle_mode))
 
     def join(self, other, on, *, how: str = "inner", algorithm: str = "sort",
-             bucket_capacity=None, out_capacity=None, seed: int = 7
+             bucket_capacity=None, out_capacity=None, seed: int = 7,
+             stages: int | None = None, shuffle_mode: str = "alltoall"
              ) -> "LazyFrame":
         other = self._lift(other)
         inputs, rplan = self._merge(other)
         on_t = (on,) if isinstance(on, str) else tuple(on)
         node = PL.Join(self._plan, rplan, on_t, how=how, algorithm=algorithm,
                        bucket_capacity=bucket_capacity,
-                       out_capacity=out_capacity, seed=seed)
+                       out_capacity=out_capacity, seed=seed,
+                       stages=stages, shuffle_mode=shuffle_mode)
         return LazyFrame(self._ctx, node, inputs)
 
     def groupby(self, keys, aggs, *, strategy: str = "auto",
                 bucket_capacity=None, partial_capacity=None,
-                out_capacity=None, seed: int = 7) -> "LazyFrame":
+                out_capacity=None, seed: int = 7, stages: int | None = None,
+                shuffle_mode: str = "alltoall") -> "LazyFrame":
         """Keyed aggregation. ``strategy='auto'`` (default) defers the
         shuffle-vs-two-phase choice to the optimizer's cost model: with
         input stats (``ctx.analyze``) it compares estimated wire rows
@@ -117,10 +123,12 @@ class LazyFrame:
         node = PL.GroupBy(self._plan, keys_t, pairs, strategy=strategy,
                           bucket_capacity=bucket_capacity,
                           partial_capacity=partial_capacity,
-                          out_capacity=out_capacity, seed=seed)
+                          out_capacity=out_capacity, seed=seed,
+                          stages=stages, shuffle_mode=shuffle_mode)
         return self._chain(node)
 
-    def sort(self, by, *, bucket_capacity=None, samples_per_shard: int = 64
+    def sort(self, by, *, bucket_capacity=None, samples_per_shard: int = 64,
+             stages: int | None = None, shuffle_mode: str = "alltoall"
              ) -> "LazyFrame":
         """Global sort (range partition + local sort). The optimizer tracks
         the output's :class:`~repro.core.repartition.RangePartitioning`, so
@@ -130,10 +138,13 @@ class LazyFrame:
         by_t = (by,) if isinstance(by, str) else tuple(by)
         return self._chain(PL.Sort(self._plan, by_t,
                                    bucket_capacity=bucket_capacity,
-                                   samples_per_shard=samples_per_shard))
+                                   samples_per_shard=samples_per_shard,
+                                   stages=stages,
+                                   shuffle_mode=shuffle_mode))
 
     def window(self, by, funcs, *, order_by=(), bucket_capacity=None,
-               samples_per_shard: int = 64) -> "LazyFrame":
+               samples_per_shard: int = 64, stages: int | None = None,
+               shuffle_mode: str = "alltoall") -> "LazyFrame":
         """Window functions over (by, order_by)-sorted segments —
         row-preserving analytics: ``rank``, ``dense_rank``,
         ``row_number``, ``lag``/``lead`` (offsets via ``("lag", col,
@@ -152,36 +163,45 @@ class LazyFrame:
         pairs = A.normalize_funcs(funcs)
         return self._chain(PL.Window(self._plan, by_t, order_t, pairs,
                                      bucket_capacity=bucket_capacity,
-                                     samples_per_shard=samples_per_shard))
+                                     samples_per_shard=samples_per_shard,
+                                     stages=stages,
+                                     shuffle_mode=shuffle_mode))
 
-    def union(self, other, *, bucket_capacity=None, seed: int = 7
+    def union(self, other, *, bucket_capacity=None, seed: int = 7,
+              stages: int | None = None, shuffle_mode: str = "alltoall"
               ) -> "LazyFrame":
         other = self._lift(other)
         inputs, rplan = self._merge(other)
         return LazyFrame(self._ctx, PL.Union(
-            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed),
-            inputs)
+            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed,
+            stages=stages, shuffle_mode=shuffle_mode), inputs)
 
-    def intersect(self, other, *, bucket_capacity=None, seed: int = 7
+    def intersect(self, other, *, bucket_capacity=None, seed: int = 7,
+                  stages: int | None = None, shuffle_mode: str = "alltoall"
                   ) -> "LazyFrame":
         other = self._lift(other)
         inputs, rplan = self._merge(other)
         return LazyFrame(self._ctx, PL.Intersect(
-            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed),
-            inputs)
+            self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed,
+            stages=stages, shuffle_mode=shuffle_mode), inputs)
 
     def difference(self, other, *, mode: str = "symmetric",
-                   bucket_capacity=None, seed: int = 7) -> "LazyFrame":
+                   bucket_capacity=None, seed: int = 7,
+                   stages: int | None = None,
+                   shuffle_mode: str = "alltoall") -> "LazyFrame":
         other = self._lift(other)
         inputs, rplan = self._merge(other)
         return LazyFrame(self._ctx, PL.Difference(
             self._plan, rplan, bucket_capacity=bucket_capacity, seed=seed,
-            mode=mode), inputs)
+            mode=mode, stages=stages, shuffle_mode=shuffle_mode), inputs)
 
-    def distinct(self, *, bucket_capacity=None, seed: int = 7) -> "LazyFrame":
+    def distinct(self, *, bucket_capacity=None, seed: int = 7,
+                 stages: int | None = None, shuffle_mode: str = "alltoall"
+                 ) -> "LazyFrame":
         return self._chain(PL.Distinct(self._plan,
                                        bucket_capacity=bucket_capacity,
-                                       seed=seed))
+                                       seed=seed, stages=stages,
+                                       shuffle_mode=shuffle_mode))
 
     # -- introspection --------------------------------------------------------
     @property

@@ -54,32 +54,44 @@ def _row_bytes(table: Table) -> int:
 def _shuffle(table: Table, keys: Sequence[str], *, axis_name: str,
              bucket_capacity: int, seed: int, skip: bool = False,
              report: list | None = None, label: str = "shuffle",
-             pid=None) -> tuple[Table, ShuffleStats]:
+             pid=None, stages: int | None = None,
+             shuffle_mode: str = "alltoall") -> tuple[Table, ShuffleStats]:
     """Hash-partition + AllToAll, or the elided identity when ``skip``.
 
     One record per call lands in ``report`` (at trace time): the dense
     AllToAll ships ``p^2 * bucket * row_bytes`` regardless of row validity,
-    so the wire volume is static — 0 when the shuffle is elided.
+    so the wire volume is static — 0 when the shuffle is elided, and the
+    same for every ``stages`` (staging re-chunks the exchange, it never
+    changes what crosses the wire). ``stages=None`` auto-sizes from the
+    wire-byte estimate (:func:`repro.core.stats.pick_stages`).
     """
+    from repro.core import stats as S
+
     p = axis_size(axis_name)
     rb = _row_bytes(table)
+    if stages is None and not skip:
+        stages = S.pick_stages(p * p * bucket_capacity * rb, bucket_capacity)
     if report is not None:
         report.append({
             "op": label, "elided": bool(skip), "row_bytes": rb,
             "bucket": 0 if skip else bucket_capacity,
             "wire_bytes": 0 if skip else p * p * bucket_capacity * rb,
+            "stages": 0 if skip else stages, "mode": shuffle_mode,
         })
     if skip:
         return table, zero_shuffle_stats()
     if pid is None:
         pid = _row_pid(table, list(keys), p, seed)
     return repartition(table, pid, axis_name=axis_name,
-                       bucket_capacity=bucket_capacity)
+                       bucket_capacity=bucket_capacity, stages=stages,
+                       shuffle_mode=shuffle_mode)
 
 
 def dist_repartition_by(table: Table, keys: Sequence[str] | str, *,
                         axis_name: str, bucket_capacity: int, seed: int = 7,
-                        skip_shuffle: bool = False, report: list | None = None):
+                        skip_shuffle: bool = False, report: list | None = None,
+                        stages: int | None = None,
+                        shuffle_mode: str = "alltoall"):
     """Explicit hash repartition — pre-partition once, elide shuffles later.
 
     The caller (DistContext / LazyFrame) tags the result with the matching
@@ -89,7 +101,8 @@ def dist_repartition_by(table: Table, keys: Sequence[str] | str, *,
     keys_l = [keys] if isinstance(keys, str) else list(keys)
     out, st = _shuffle(table, keys_l, axis_name=axis_name,
                        bucket_capacity=bucket_capacity, seed=seed,
-                       skip=skip_shuffle, report=report, label="repartition")
+                       skip=skip_shuffle, report=report, label="repartition",
+                       stages=stages, shuffle_mode=shuffle_mode)
     return out, (st,)
 
 
@@ -187,6 +200,8 @@ def dist_join(
     align_keys: Sequence[str] | None = None,
     count_truncation: bool = False,
     report: list | None = None,
+    stages: int | None = None,
+    shuffle_mode: str = "alltoall",
 ):
     """Distributed join = shuffle both sides by key hash, then local join.
 
@@ -222,11 +237,13 @@ def dist_join(
     left2, st_l = _shuffle(left, on_l, axis_name=axis_name,
                            bucket_capacity=bucket_capacity, seed=ps,
                            skip=skip_left_shuffle, report=report,
-                           label="join.left", pid=lpid)
+                           label="join.left", pid=lpid, stages=stages,
+                           shuffle_mode=shuffle_mode)
     right2, st_r = _shuffle(right, on_l, axis_name=axis_name,
                             bucket_capacity=bucket_capacity, seed=ps,
                             skip=skip_right_shuffle, report=report,
-                            label="join.right", pid=rpid)
+                            label="join.right", pid=rpid, stages=stages,
+                            shuffle_mode=shuffle_mode)
     if count_truncation:
         out, trunc = L.join(left2, right2, on_l, how=how,
                             algorithm=algorithm, out_capacity=out_capacity,
@@ -270,17 +287,20 @@ def dist_limit(table: Table, n: int, *, axis_name: str,
 def _dist_set_op(a: Table, b: Table, op, *, axis_name: str, bucket_capacity: int,
                  seed: int = 7, skip_left_shuffle: bool = False,
                  skip_right_shuffle: bool = False, report: list | None = None,
-                 label: str = "set_op", **kw):
+                 label: str = "set_op", stages: int | None = None,
+                 shuffle_mode: str = "alltoall", **kw):
     """Shuffle by whole-row hash (paper §II-B-4) so duplicates colocate."""
     names = a.column_names
     a2, st_a = _shuffle(a, names, axis_name=axis_name,
                         bucket_capacity=bucket_capacity, seed=seed,
                         skip=skip_left_shuffle, report=report,
-                        label=f"{label}.left")
+                        label=f"{label}.left", stages=stages,
+                        shuffle_mode=shuffle_mode)
     b2, st_b = _shuffle(b, names, axis_name=axis_name,
                         bucket_capacity=bucket_capacity, seed=seed,
                         skip=skip_right_shuffle, report=report,
-                        label=f"{label}.right")
+                        label=f"{label}.right", stages=stages,
+                        shuffle_mode=shuffle_mode)
     return op(a2, b2, **kw), (st_a, st_b)
 
 
@@ -299,10 +319,12 @@ def dist_difference(a: Table, b: Table, *, mode: str = "symmetric", **kw):
 
 def dist_distinct(a: Table, *, axis_name: str, bucket_capacity: int,
                   seed: int = 7, skip_shuffle: bool = False,
-                  report: list | None = None):
+                  report: list | None = None, stages: int | None = None,
+                  shuffle_mode: str = "alltoall"):
     a2, st = _shuffle(a, a.column_names, axis_name=axis_name,
                       bucket_capacity=bucket_capacity, seed=seed,
-                      skip=skip_shuffle, report=report, label="distinct")
+                      skip=skip_shuffle, report=report, label="distinct",
+                      stages=stages, shuffle_mode=shuffle_mode)
     return L.distinct(a2), (st,)
 
 
@@ -320,6 +342,8 @@ def dist_groupby(
     shuffle_seed: int | None = None,
     skip_shuffle: bool = False,
     report: list | None = None,
+    stages: int | None = None,
+    shuffle_mode: str = "alltoall",
 ):
     """Distributed GroupBy — both strategies of arXiv:2010.14596.
 
@@ -346,19 +370,22 @@ def dist_groupby(
     if skip_shuffle:
         _, st = _shuffle(table, keys_l, axis_name=axis_name,
                          bucket_capacity=bucket_capacity, seed=ps, skip=True,
-                         report=report, label=f"groupby.{strategy}")
+                         report=report, label=f"groupby.{strategy}",
+                         stages=stages, shuffle_mode=shuffle_mode)
         return A.groupby(table, keys_l, pairs, out_capacity=out_capacity), (st,)
     if strategy == "shuffle":
         t2, st = _shuffle(table, keys_l, axis_name=axis_name,
                           bucket_capacity=bucket_capacity, seed=ps,
-                          report=report, label="groupby.shuffle")
+                          report=report, label="groupby.shuffle",
+                          stages=stages, shuffle_mode=shuffle_mode)
         return A.groupby(t2, keys_l, pairs, out_capacity=out_capacity), (st,)
     if strategy == "two_phase":
         part = A.partial_groupby(table, keys_l, pairs,
                                  out_capacity=partial_capacity)
         part2, st = _shuffle(part, keys_l, axis_name=axis_name,
                              bucket_capacity=bucket_capacity, seed=ps,
-                             report=report, label="groupby.two_phase")
+                             report=report, label="groupby.two_phase",
+                             stages=stages, shuffle_mode=shuffle_mode)
         return A.combine_groupby(part2, keys_l, pairs,
                                  out_capacity=out_capacity), (st,)
     raise ValueError(strategy)
@@ -493,6 +520,8 @@ def dist_window(
     skip_shuffle: bool = False,
     use_kernel=None,
     report: list | None = None,
+    stages: int | None = None,
+    shuffle_mode: str = "alltoall",
 ):
     """Distributed window functions: range partition -> local sort ->
     per-shard segment scans + cross-shard boundary carry.
@@ -520,13 +549,15 @@ def dist_window(
     if skip_shuffle:
         t2, st = _shuffle(table, keys, axis_name=axis_name,
                           bucket_capacity=bucket_capacity, seed=0, skip=True,
-                          report=report, label="window")
+                          report=report, label="window", stages=stages,
+                          shuffle_mode=shuffle_mode)
     else:
         pid = _lex_splitter_pids(table, keys, axis_name=axis_name,
                                  samples_per_shard=samples_per_shard)
         t2, st = _shuffle(table, keys, axis_name=axis_name,
                           bucket_capacity=bucket_capacity, seed=0, pid=pid,
-                          report=report, label="window")
+                          report=report, label="window", stages=stages,
+                          shuffle_mode=shuffle_mode)
     if t2.capacity == 0:
         t2 = Table({k: jnp.zeros((1,) + v.shape[1:], v.dtype)
                     for k, v in t2.columns.items()}, t2.row_count)
@@ -604,6 +635,8 @@ def dist_sort(
     samples_per_shard: int = 64,
     skip_shuffle: bool = False,
     report: list | None = None,
+    stages: int | None = None,
+    shuffle_mode: str = "alltoall",
 ):
     """Global sort: sampled range partition, then local sort per shard.
 
@@ -616,11 +649,13 @@ def dist_sort(
     if skip_shuffle:  # single shard (or provably range-partitioned already)
         _, st = _shuffle(table, by_l, axis_name=axis_name,
                          bucket_capacity=bucket_capacity, seed=0, skip=True,
-                         report=report, label="sort")
+                         report=report, label="sort", stages=stages,
+                         shuffle_mode=shuffle_mode)
         return L.sort_by(table, by_l), (st,)
     pid = _lex_splitter_pids(table, by_l, axis_name=axis_name,
                              samples_per_shard=samples_per_shard)
     out, st = _shuffle(table, by_l, axis_name=axis_name,
                        bucket_capacity=bucket_capacity, seed=0, pid=pid,
-                       report=report, label="sort")
+                       report=report, label="sort", stages=stages,
+                       shuffle_mode=shuffle_mode)
     return L.sort_by(out, by_l), (st,)

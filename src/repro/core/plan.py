@@ -136,6 +136,8 @@ class Repartition(Node):
     bucket_capacity: int | None = None
     skip_shuffle: bool = False
     sized: bool = False  # bucket filled in by the cost model (estimate!)
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 @dataclass(frozen=True)
@@ -160,6 +162,8 @@ class Join(Node):
     out_sized: bool = False  # out_capacity filled by the cost model —
     # tracked separately so a USER-set out_capacity (deliberate
     # truncation, surfaced in stats) is never treated as a bad estimate
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 @dataclass(frozen=True)
@@ -179,6 +183,8 @@ class GroupBy(Node):
     shuffle_seed: int | None = None
     skip_shuffle: bool = False
     sized: bool = False  # bucket filled in by the cost model (estimate!)
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 @dataclass(frozen=True)
@@ -189,6 +195,8 @@ class Sort(Node):
     samples_per_shard: int = 64
     skip_shuffle: bool = False
     sized: bool = False  # bucket filled in by the cost model (estimate!)
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 @dataclass(frozen=True)
@@ -212,6 +220,8 @@ class Window(Node):
     samples_per_shard: int = 64
     skip_shuffle: bool = False
     sized: bool = False  # bucket filled in by the cost model (estimate!)
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 @dataclass(frozen=True)
@@ -226,6 +236,8 @@ class SetOp(Node):
     skip_left_shuffle: bool = False
     skip_right_shuffle: bool = False
     sized: bool = False  # bucket filled in by the cost model (estimate!)
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 @dataclass(frozen=True)
@@ -250,6 +262,8 @@ class Distinct(Node):
     seed: int = 7
     skip_shuffle: bool = False
     sized: bool = False  # bucket filled in by the cost model (estimate!)
+    stages: int | None = None  # shuffle pipeline depth (None = cost pick)
+    shuffle_mode: str = "alltoall"
 
 
 def children(node: Node) -> tuple[Node, ...]:
@@ -795,6 +809,30 @@ class _Estimator:
         raise TypeError(node)
 
 
+def _schema_row_bytes(schema: dict) -> int:
+    """Dense wire bytes per row of a schema (the _row_bytes formula on
+    ShapeDtypeStructs of trailing row shapes)."""
+    total = 0
+    for sds in schema.values():
+        n = 1
+        for d in sds.shape:
+            n *= d
+        total += n * jnp.dtype(sds.dtype).itemsize
+    return total
+
+
+def _pick_node_stages(node: Node, est: _Estimator, p: int, bucket,
+                      skipped: bool, *sources: Node):
+    """The cost pass's shuffle-staging pick: wire bytes from the sized
+    bucket and the shuffled input's schema -> :func:`S.pick_stages`.
+    Keeps an explicit ``stages=`` untouched; leaves None (runtime
+    auto-pick from the same formula) when the bucket isn't known yet."""
+    if node.stages is not None or bucket is None or p <= 1 or skipped:
+        return node.stages
+    rb = max(_schema_row_bytes(est.an.schema(s)) for s in sources)
+    return S.pick_stages(p * p * bucket * rb, bucket)
+
+
 def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
     """Fill unset capacities / resolve ``auto`` strategies from estimates.
 
@@ -803,7 +841,9 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
     wrong" and retries once with conservative capacities
     (``execute_plan(..., safe_capacity=True)``). A single-shard mesh
     skips sizing entirely — there is no wire to save and the fallback
-    capacities are already local-only.
+    capacities are already local-only. The same pass picks each shuffle's
+    pipeline depth (``stages``) from its estimated wire bytes — S=1 below
+    the threshold, so small shuffles pay zero extra collectives.
     """
     kids = [_apply_costs(c, est, p) for c in children(node)]
     if isinstance(node, GroupBy):
@@ -828,8 +868,10 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
                 src = min(src, ndv)
             bucket = S.size_bucket(src, p)
             sized = True
+        stages = _pick_node_stages(node, est, p, bucket, node.skip_shuffle,
+                                   node.child)
         return replace(node, child=kids[0], strategy=strategy,
-                       bucket_capacity=bucket, sized=sized)
+                       bucket_capacity=bucket, sized=sized, stages=stages)
     if isinstance(node, Repartition):
         cs = est.stats(node.child)
         bucket, sized = node.bucket_capacity, node.sized
@@ -837,8 +879,10 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
                 and not node.skip_shuffle):
             bucket = S.size_bucket(cs.shard_rows(p), p)
             sized = True
+        stages = _pick_node_stages(node, est, p, bucket, node.skip_shuffle,
+                                   node.child)
         return replace(node, child=kids[0], bucket_capacity=bucket,
-                       sized=sized)
+                       sized=sized, stages=stages)
     if isinstance(node, (Sort, Window)):
         cs = est.stats(node.child)
         bucket, sized = node.bucket_capacity, node.sized
@@ -848,18 +892,20 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
             bucket = S.size_bucket(cs.shard_rows(p), p,
                                    factor=S.RANGE_SIZING_FACTOR)
             sized = True
+        stages = _pick_node_stages(node, est, p, bucket, node.skip_shuffle,
+                                   node.child)
         return replace(node, child=kids[0], bucket_capacity=bucket,
-                       sized=sized)
+                       sized=sized, stages=stages)
     if isinstance(node, Join):
         sl, sr = est.stats(node.left), est.stats(node.right)
         js = est.stats(node)
         bucket, out = node.bucket_capacity, node.out_capacity
         sized, out_sized = node.sized, node.out_sized
+        both_skipped = node.skip_left_shuffle and node.skip_right_shuffle
         if p > 1 and sl is not None and sr is not None:
             # a range-ALIGNED join keeps its runtime capacity-bump bucket
             # (a whole source shard may target one anchor range — the
             # unoverflowable bound beats any estimate there)
-            both_skipped = node.skip_left_shuffle and node.skip_right_shuffle
             if bucket is None and node.align is None and not both_skipped:
                 src = max(
                     0.0 if node.skip_left_shuffle else sl.shard_rows(p),
@@ -872,9 +918,11 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
                 out = S.size_output(js.rows, p,
                                     factor=S.JOIN_OUT_SIZING_FACTOR)
                 out_sized = True
+        stages = _pick_node_stages(node, est, p, bucket, both_skipped,
+                                   node.left, node.right)
         return replace(node, left=kids[0], right=kids[1],
                        bucket_capacity=bucket, out_capacity=out,
-                       sized=sized, out_sized=out_sized)
+                       sized=sized, out_sized=out_sized, stages=stages)
     if isinstance(node, SetOp):
         sl, sr = est.stats(node.left), est.stats(node.right)
         bucket, sized = node.bucket_capacity, node.sized
@@ -885,8 +933,10 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
                       0.0 if node.skip_right_shuffle else sr.shard_rows(p))
             bucket = S.size_bucket(src, p)
             sized = True
+        stages = _pick_node_stages(node, est, p, bucket, both_skipped,
+                                   node.left, node.right)
         return replace(node, left=kids[0], right=kids[1],
-                       bucket_capacity=bucket, sized=sized)
+                       bucket_capacity=bucket, sized=sized, stages=stages)
     if isinstance(node, Distinct):
         cs = est.stats(node.child)
         bucket, sized = node.bucket_capacity, node.sized
@@ -894,8 +944,10 @@ def _apply_costs(node: Node, est: _Estimator, p: int) -> Node:
                 and not node.skip_shuffle):
             bucket = S.size_bucket(cs.shard_rows(p), p)
             sized = True
+        stages = _pick_node_stages(node, est, p, bucket, node.skip_shuffle,
+                                   node.child)
         return replace(node, child=kids[0], bucket_capacity=bucket,
-                       sized=sized)
+                       sized=sized, stages=stages)
     return _with_children(node, kids)
 
 
@@ -1133,6 +1185,13 @@ def _canon(node: Node, identity: bool = False):
         v = getattr(node, f.name)
         if isinstance(v, Node) or callable(v):
             continue
+        # staging knobs at their identity values keep the pre-staging
+        # canonical key: S=1 IS today's program (bit-identical, same HLO),
+        # so default plans must hit the same cache entries they always did
+        if f.name == "stages" and v in (None, 1):
+            continue
+        if f.name == "shuffle_mode" and v == "alltoall":
+            continue
         vals.append((f.name, v))
     return (name, tuple(vals)) + tuple(_canon(c, identity)
                                        for c in children(node))
@@ -1199,7 +1258,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
             out, st = D.dist_repartition_by(
                 t, list(node.keys), axis_name=axis_name,
                 bucket_capacity=cap(t, node.bucket_capacity), seed=node.seed,
-                skip_shuffle=node.skip_shuffle, report=report)
+                skip_shuffle=node.skip_shuffle, report=report,
+                stages=node.stages, shuffle_mode=node.shuffle_mode)
             stats.extend(st)
             return out
         if isinstance(node, Join):
@@ -1231,7 +1291,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                 skip_right_shuffle=node.skip_right_shuffle,
                 align=node.align, align_keys=node.align_keys,
                 count_truncation=node.out_sized,
-                report=report)
+                report=report, stages=node.stages,
+                shuffle_mode=node.shuffle_mode)
             stats.extend(st)
             return out
         if isinstance(node, GroupBy):
@@ -1247,7 +1308,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                 partial_capacity=node.partial_capacity,
                 out_capacity=node.out_capacity, seed=node.seed,
                 shuffle_seed=node.shuffle_seed,
-                skip_shuffle=node.skip_shuffle, report=report)
+                skip_shuffle=node.skip_shuffle, report=report,
+                stages=node.stages, shuffle_mode=node.shuffle_mode)
             stats.extend(st)
             return out
         if isinstance(node, Sort):
@@ -1261,7 +1323,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                                     slack=S.FALLBACK_SLACK
                                     * S.SORT_SLACK_FACTOR),
                 samples_per_shard=node.samples_per_shard,
-                skip_shuffle=node.skip_shuffle, report=report)
+                skip_shuffle=node.skip_shuffle, report=report,
+                stages=node.stages, shuffle_mode=node.shuffle_mode)
             stats.extend(st)
             return out
         if isinstance(node, Window):
@@ -1275,7 +1338,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
                                     slack=S.FALLBACK_SLACK
                                     * S.SORT_SLACK_FACTOR),
                 samples_per_shard=node.samples_per_shard,
-                skip_shuffle=node.skip_shuffle, report=report)
+                skip_shuffle=node.skip_shuffle, report=report,
+                stages=node.stages, shuffle_mode=node.shuffle_mode)
             stats.extend(st)
             return out
         if isinstance(node, SetOp):
@@ -1284,7 +1348,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
             kw = dict(axis_name=axis_name, bucket_capacity=cb, seed=node.seed,
                       skip_left_shuffle=node.skip_left_shuffle,
                       skip_right_shuffle=node.skip_right_shuffle,
-                      report=report)
+                      report=report, stages=node.stages,
+                      shuffle_mode=node.shuffle_mode)
             if isinstance(node, Union):
                 out, st = D.dist_union(a, b, **kw)
             elif isinstance(node, Intersect):
@@ -1298,7 +1363,8 @@ def execute_plan(plan: Node, tables: Sequence[Table], *, axis_name: str,
             out, st = D.dist_distinct(
                 t, axis_name=axis_name,
                 bucket_capacity=cap(t, node.bucket_capacity), seed=node.seed,
-                skip_shuffle=node.skip_shuffle, report=report)
+                skip_shuffle=node.skip_shuffle, report=report,
+                stages=node.stages, shuffle_mode=node.shuffle_mode)
             stats.extend(st)
             return out
         raise TypeError(node)
@@ -1341,6 +1407,11 @@ def explain(plan: Node, input_schemas: Sequence[dict] | None = None,
             parts.append(f"bucket={bucket}")
         if isinstance(node, Join) and node.out_capacity is not None:
             parts.append(f"out={node.out_capacity}")
+        stages = getattr(node, "stages", None)
+        if stages is not None:
+            parts.append(f"stages={stages}")
+        if getattr(node, "shuffle_mode", "alltoall") != "alltoall":
+            parts.append(f"mode={node.shuffle_mode}")
         if _node_cost_sized(node):
             parts.append("cost-sized")
         if est is not None:

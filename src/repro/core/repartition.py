@@ -9,10 +9,23 @@ relational operator — and, in this framework, MoE expert dispatch — is
 MPI ``AllToAllv`` (variable counts) has no dense-collective equivalent on a
 TPU mesh, so we adapt: each shard packs rows into ``num_partitions`` equal
 ``bucket_capacity`` send slots (grouped with a stable sort — dense, vectorized)
-and runs ``jax.lax.all_to_all`` once for all columns. Skew beyond
+and exchanges them with ``jax.lax.all_to_all``. Skew beyond
 ``bucket_capacity`` is *counted and surfaced* (``overflow``) rather than
 silently dropped being undetectable — the production recourse is re-running
 with a bigger capacity, mirroring Cylon's memory-budget failure mode.
+
+The exchange itself is **staged** (:func:`staged_all_to_all`): the
+``(p, bucket_capacity)`` send buckets split into ``S`` chunks along the
+capacity axis, one collective per chunk, so XLA's scheduler can overlap
+chunk i+1's gather/pack and chunk i-1's unpack with chunk i's wire time
+inside the one fused shard_map program. Chunks are written back into the
+same ``(p, bucket)`` slots a monolithic exchange fills, so every staging
+(and the ``ppermute``-ring strategy, ``shuffle_mode="ring"``) is
+bit-identical to ``S=1`` — same recv buffers, same overflow counts, same
+row order after ``compact``. The per-bucket send counts ride *inside* the
+first chunk of the first 4-byte column (bitcast into a prepended capacity
+slot), folding the old separate ``recv_counts`` collective into the data
+exchange — one fewer collective per shuffle.
 
 Runs inside ``shard_map`` (BSP lockstep = SPMD).
 """
@@ -24,6 +37,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.table import Table
 from repro.core.ops_local import compact
@@ -116,6 +130,11 @@ def pack_by_partition(part_id: jax.Array, num_partitions: int,
     (DESIGN.md §2, level-2).
     """
     (n,) = part_id.shape
+    if n == 0:
+        # clip(off + j, 0, n - 1) has an invalid upper bound at n == 0 and
+        # order is empty — nothing to pack, every slot is vacant
+        return (jnp.full((num_partitions, bucket_capacity), -1, jnp.int32),
+                jnp.zeros((num_partitions,), jnp.int32))
     pid_sort = jnp.where(part_id >= 0, part_id, num_partitions)
     order = jnp.argsort(pid_sort, stable=True)
     hist = kops.bucket_histogram(part_id, num_partitions)
@@ -126,17 +145,104 @@ def pack_by_partition(part_id: jax.Array, num_partitions: int,
     return jnp.where(ok, order[src], -1), hist
 
 
+def _chunk_bounds(width: int, stages: int) -> list[tuple[int, int]]:
+    """Split ``[0, width)`` into ~``stages`` contiguous chunks.
+
+    Clamps: ``stages <= 1`` (or ``width <= 1``) is one chunk, ``stages >
+    width`` degrades to one slot per chunk, and a non-divisible width puts
+    the remainder in the last chunk. Empty list when ``width == 0``.
+    """
+    if width <= 0:
+        return []
+    from repro.utils import ceil_div
+
+    step = ceil_div(width, max(1, min(int(stages), width)))
+    return [(lo, min(lo + step, width)) for lo in range(0, width, step)]
+
+
+def _ring_exchange(buf: jax.Array, axis_name: str) -> jax.Array:
+    """AllToAll via a ``ppermute`` ring: p-1 point-to-point steps.
+
+    Step k sends this shard's bucket for destination ``(i + k) % p`` along
+    the static permutation ``s -> (s + k) % p``; the receiver stores it at
+    recv slot ``(i - k) % p`` — element-for-element the placement
+    ``jax.lax.all_to_all(split=0, concat=0)`` produces (k = 0 is the local
+    bucket, no collective). A comparison strategy for the staged dense
+    collective: maximally decomposed, so `stages` does not subdivide it.
+    """
+    p = axis_size(axis_name)
+    if p == 1:
+        return buf
+    idx = jax.lax.axis_index(axis_name)
+    out = jnp.zeros_like(buf)
+    for k in range(p):
+        send_slot = jax.lax.rem(idx + k, p)
+        chunk = jax.lax.dynamic_index_in_dim(buf, send_slot, axis=0,
+                                             keepdims=True)
+        if k:
+            chunk = jax.lax.ppermute(
+                chunk, axis_name, [(s, (s + k) % p) for s in range(p)])
+        recv_slot = jax.lax.rem(idx - k + p, p)
+        out = jax.lax.dynamic_update_index_in_dim(out, chunk, recv_slot,
+                                                  axis=0)
+    return out
+
+
+def staged_all_to_all(buf: jax.Array, axis_name: str, *, stages: int = 1,
+                      shuffle_mode: str = "alltoall") -> jax.Array:
+    """Exchange ``(p, width, *rest)`` send buckets, optionally pipelined.
+
+    ``stages > 1`` splits the width (capacity) axis into that many chunks
+    and issues one ``all_to_all`` per chunk; each chunk lands in the same
+    ``(source, slot)`` position the monolithic collective fills, so the
+    result is bit-identical for every staging while XLA overlaps one
+    chunk's wire time with its neighbours' pack/unpack compute.
+    ``shuffle_mode="ring"`` swaps in :func:`_ring_exchange` (p-1 ppermute
+    steps) — also bit-identical, also already decomposed, so ``stages`` is
+    ignored there.
+    """
+    if shuffle_mode == "ring":
+        return _ring_exchange(buf, axis_name)
+    if shuffle_mode != "alltoall":
+        raise ValueError(f"unknown shuffle_mode: {shuffle_mode!r}")
+    bounds = _chunk_bounds(buf.shape[1], stages)
+    if len(bounds) <= 1:
+        return jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=True)
+    return jnp.concatenate(
+        [jax.lax.all_to_all(buf[:, lo:hi], axis_name, split_axis=0,
+                            concat_axis=0, tiled=True) for lo, hi in bounds],
+        axis=1)
+
+
+def _counts_carrier(table: Table) -> str | None:
+    """The column whose exchange carries the per-bucket send counts: the
+    first (sorted) 4-byte column — the int32 counts bitcast losslessly into
+    its dtype and ride a prepended capacity slot of its FIRST chunk, so no
+    separate counts collective is needed. None when no column qualifies
+    (the separate-collective fallback)."""
+    for name in table.column_names:
+        if table.columns[name].dtype.itemsize == 4:
+            return name
+    return None
+
+
 def repartition(
     table: Table,
     part_id: jax.Array,
     *,
     axis_name: str,
     bucket_capacity: int,
+    stages: int = 1,
+    shuffle_mode: str = "alltoall",
 ) -> tuple[Table, ShuffleStats]:
     """Send each valid row to the shard named by ``part_id`` (int32, -1=invalid).
 
     Returns the received table (capacity = num_shards * bucket_capacity,
-    valid rows front-compacted) and shuffle stats.
+    valid rows front-compacted) and shuffle stats. ``stages`` pipelines the
+    exchange (see :func:`staged_all_to_all`); every ``(stages,
+    shuffle_mode)`` is bit-identical — same recv layout, same overflow
+    accounting, same compacted row order.
     """
     p = axis_size(axis_name)
     c = table.capacity
@@ -146,20 +252,45 @@ def repartition(
     # group rows by destination: stable sort on (pid, original order)
     send_idx, hist = pack_by_partition(
         jnp.where(valid, part_id, -1), p, cb)  # (p, cb)
+    sent = jnp.minimum(hist, cb).astype(jnp.int32)
+    carrier = _counts_carrier(table)
 
     recv_cols = {}
+    recv_counts = None
     for name, col in table.columns.items():
-        buf = col[jnp.clip(send_idx, 0, c - 1)]  # (p, cb, *rest)
-        sel = send_idx.reshape(send_idx.shape + (1,) * (col.ndim - 1)) >= 0
-        buf = jnp.where(sel, buf, jnp.zeros_like(buf))
-        recv = jax.lax.all_to_all(buf, axis_name, split_axis=0, concat_axis=0,
-                                  tiled=True)
-        recv_cols[name] = recv.reshape((p * cb,) + col.shape[1:])
+        rest = col.shape[1:]
+        if c == 0:  # empty table: nothing to gather, all slots vacant
+            buf = jnp.zeros((p, cb) + rest, col.dtype)
+        else:
+            buf = col[jnp.clip(send_idx, 0, c - 1)]  # (p, cb, *rest)
+            sel = send_idx.reshape(send_idx.shape + (1,) * (col.ndim - 1)) >= 0
+            buf = jnp.where(sel, buf, jnp.zeros_like(buf))
+        if name == carrier:
+            # counts fold: bitcast the (p,) int32 sent counts into this
+            # column's dtype and PREPEND them as capacity slot 0, so they
+            # ride the first chunk of the staged exchange; the collective
+            # moves bytes verbatim, so the round trip is lossless
+            cnt = jax.lax.bitcast_convert_type(sent, col.dtype)
+            if rest:
+                meta = jnp.zeros((p, int(np.prod(rest))), col.dtype)
+                meta = meta.at[:, 0].set(cnt).reshape((p, 1) + rest)
+            else:
+                meta = cnt[:, None]
+            buf = jnp.concatenate([meta, buf], axis=1)  # (p, cb+1, *rest)
+        recv = staged_all_to_all(buf, axis_name, stages=stages,
+                                 shuffle_mode=shuffle_mode)
+        if name == carrier:
+            meta_r = recv[:, 0]
+            if rest:
+                meta_r = meta_r.reshape(p, -1)[:, 0]
+            recv_counts = jax.lax.bitcast_convert_type(meta_r, jnp.int32)
+            recv = recv[:, 1:]
+        recv_cols[name] = recv.reshape((p * cb,) + rest)
 
-    sent = jnp.minimum(hist, cb)
-    recv_counts = jax.lax.all_to_all(
-        sent.reshape(p, 1), axis_name, split_axis=0, concat_axis=0, tiled=True
-    ).reshape(p)
+    if recv_counts is None:  # no 4-byte column: separate counts collective
+        recv_counts = staged_all_to_all(
+            sent.reshape(p, 1), axis_name,
+            shuffle_mode=shuffle_mode).reshape(p)
 
     recv_valid = (jnp.arange(cb)[None, :] < recv_counts[:, None]).reshape(p * cb)
     out = compact(Table(recv_cols, jnp.asarray(p * cb, jnp.int32)), recv_valid)

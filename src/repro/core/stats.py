@@ -77,6 +77,32 @@ JOIN_OUT_SIZING_FACTOR = 1.5
 #: exp(ndv/m) / ndv: under 3% up to ndv ~ m, degrading gracefully above.
 SKETCH_BUCKETS = 4096
 
+#: A shuffle below this wire-byte estimate runs as one collective (S=1):
+#: per-collective launch overhead would swamp any comm/compute overlap.
+STAGE_WIRE_THRESHOLD = 1 << 20
+
+#: Staging ceiling — chunks beyond this buy no extra overlap (there are
+#: only ~2 neighbours to hide a chunk's wire time behind) and each one is
+#: another collective launch.
+MAX_SHUFFLE_STAGES = 4
+
+
+def pick_stages(wire_bytes: float, bucket_capacity: int) -> int:
+    """Pipeline depth for a shuffle moving ``wire_bytes`` over the wire.
+
+    S=1 below :data:`STAGE_WIRE_THRESHOLD` (small shuffles pay zero extra
+    collectives), then doubles with the wire volume up to
+    :data:`MAX_SHUFFLE_STAGES`, clamped so each chunk keeps at least one
+    capacity slot. Every S is bit-identical; this only trades collective
+    launches against comm/compute overlap.
+    """
+    if bucket_capacity <= 1 or wire_bytes <= STAGE_WIRE_THRESHOLD:
+        return 1
+    s = 2
+    while s < MAX_SHUFFLE_STAGES and wire_bytes >= (2 * s) * STAGE_WIRE_THRESHOLD:
+        s *= 2
+    return min(s, bucket_capacity)
+
 
 # --------------------------------------------------------------------------
 # statistics containers

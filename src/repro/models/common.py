@@ -87,6 +87,11 @@ class ModelConfig:
     #   (EXPERIMENTS.md §Perf, llama3-8b train hillclimb).
     layout: str = "tp"
     ep_shuffle: bool = True         # MoE dispatch via shard_map all_to_all
+    # expert-dispatch shuffle pipelining (repartition's staged primitive):
+    # None = auto from wire bytes (stats.pick_stages); both knobs are
+    # bit-identity-preserving, like the relational `stages`/`shuffle_mode`
+    moe_shuffle_stages: int | None = None
+    moe_shuffle_mode: str = "alltoall"
     decode_seq_shard: bool = True   # flash-decoding: KV cache sharded over seq
     mla_seq_shard: bool = False     # MLA latent cache sharded over seq too
     time_unroll: bool = False       # unroll inner time-chunk loops (roofline)

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.repartition import pack_by_partition
+from repro.core.repartition import pack_by_partition, staged_all_to_all
+from repro.core.stats import pick_stages
 from repro.models.common import (
     DATA_AXIS, MODEL_AXIS, ModelConfig, ShardingRules)
 from repro.models.layers import _dense
@@ -120,13 +121,21 @@ def _dispatch_compute_combine(p, xt, cfg: ModelConfig, e_pad: int,
         e_loc = e_pad // m
         # (E, cap, d) -> (M, E_loc*cap, d) -> exchange -> (E_loc, M*cap, d)
         sendb = buf.reshape(m, e_loc * cap, d)
-        recv = jax.lax.all_to_all(sendb, axis, 0, 0, tiled=True)
+        # expert dispatch rides the relational shuffle's staged primitive:
+        # same cost-sized pipeline depth, same bit-identity contract
+        stages = cfg.moe_shuffle_stages
+        if stages is None:
+            stages = pick_stages(
+                m * m * e_loc * cap * d * sendb.dtype.itemsize, e_loc * cap)
+        recv = staged_all_to_all(sendb, axis, stages=stages,
+                                 shuffle_mode=cfg.moe_shuffle_mode)
         recv = recv.reshape(m, e_loc, cap, d).transpose(1, 0, 2, 3) \
             .reshape(e_loc, m * cap, d)
         out = _expert_ffn(p["wi"], p["wg"], p["wo"], recv)
         back = out.reshape(e_loc, m, cap, d).transpose(1, 0, 2, 3) \
             .reshape(m, e_loc * cap, d)
-        back = jax.lax.all_to_all(back, axis, 0, 0, tiled=True)
+        back = staged_all_to_all(back, axis, stages=stages,
+                                 shuffle_mode=cfg.moe_shuffle_mode)
         back = back.reshape(e_pad, cap, d)
     else:
         back = _expert_ffn(p["wi"], p["wg"], p["wo"], buf)

@@ -840,6 +840,66 @@ def case_async_overflow_deferred():
     }
 
 
+def case_staged_shuffle():
+    """Staged / ring shuffles vs the monolithic exchange, under skew.
+
+    Bit-identity is the whole contract: identical rows (sorted-multiset
+    bit compare), identical overflow with an undersized bucket, identical
+    wire-byte accounting in the report — only the collective decomposition
+    differs. Also regression-covers the empty-table edge (capacity-0
+    shards through a staged shuffle).
+    """
+    from repro.core.table import Table
+    from repro.testing.compare import tables_bitwise_equal
+
+    ctx = _ctx()
+    p = ctx.num_shards
+    rng = np.random.default_rng(11)
+    n_per = 300
+    # heavy skew: ~half the rows share one key -> one destination bucket
+    # overflows at bucket_capacity=64 (300 rows/shard, ~150 to one shard)
+    k = np.where(rng.random(p * n_per) < 0.5, 0,
+                 rng.integers(0, 997, p * n_per)).astype(np.int32)
+    host = Table.from_arrays({"k": k,
+                              "v": rng.random(p * n_per).astype(np.float32)})
+    dt = ctx.scatter(host, local_capacity=n_per)
+
+    results, reports = {}, {}
+    for name, kw in (("mono", dict(stages=1)),
+                     ("staged", dict(stages=3)),
+                     ("ring", dict(shuffle_mode="ring"))):
+        rep = []
+        out, (st,) = ctx.partition_by(dt, "k", bucket_capacity=64,
+                                      report=rep, **kw)
+        results[name] = (out, int(np.asarray(st.overflow).sum()),
+                         int(out.global_rows()))
+        reports[name] = rep[0]
+
+    mono, staged, ring = (results[n] for n in ("mono", "staged", "ring"))
+    # empty table (capacity-0 shards) through a staged shuffle: the
+    # pack_by_partition n==0 guard and the c==0 gather guard
+    empty = ctx.from_local_parts(
+        [Table.empty({"k": jnp.int32}, 0)] * p)
+    eout, (est_,) = ctx.partition_by(empty, "k", bucket_capacity=4, stages=2)
+
+    return {
+        "overflow_mono": mono[1],
+        "overflow_positive": mono[1] > 0,
+        "overflow_identical": mono[1] == staged[1] == ring[1],
+        "rows_identical": mono[2] == staged[2] == ring[2],
+        "staged_bitwise_equal": tables_bitwise_equal(mono[0], staged[0]),
+        "ring_bitwise_equal": tables_bitwise_equal(mono[0], ring[0]),
+        "wire_bytes_identical": len({reports[n]["wire_bytes"]
+                                     for n in reports}) == 1,
+        "stages_reported": [reports[n]["stages"]
+                            for n in ("mono", "staged", "ring")],
+        "modes_reported": [reports[n]["mode"]
+                           for n in ("mono", "staged", "ring")],
+        "empty_rows": int(eout.global_rows()),
+        "empty_overflow": int(np.asarray(est_.overflow).sum()),
+    }
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

@@ -159,6 +159,21 @@ def test_dist_sort_multikey():
     assert r["overflow"] == 0, r
 
 
+def test_dist_staged_shuffle():
+    """The pipelined-shuffle contract on 8 devices: every staging and the
+    ppermute ring are bit-identical to the monolithic exchange — same
+    rows, same overflow under skew, same wire-byte accounting — and an
+    empty (capacity-0) table shuffles without the old clip-bound crash."""
+    r = run_case("staged_shuffle")
+    assert r["overflow_positive"], r
+    assert r["overflow_identical"] and r["rows_identical"], r
+    assert r["staged_bitwise_equal"] and r["ring_bitwise_equal"], r
+    assert r["wire_bytes_identical"], r
+    assert r["stages_reported"] == [1, 3, 1], r
+    assert r["modes_reported"] == ["alltoall", "alltoall", "ring"], r
+    assert r["empty_rows"] == 0 and r["empty_overflow"] == 0, r
+
+
 def test_serving_async_interleaved_matches_sequential():
     """The serving contract: N interleaved collect_async clients over a
     shared session are bit-identical per query to sequential collects,
