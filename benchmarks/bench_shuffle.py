@@ -91,6 +91,10 @@ def _worker_main(argv) -> None:
     gv = np.concatenate([np.asarray(q.columns["v"]) for q in parts])
     grc = np.full((WORKERS,), cap, np.int32)
 
+    # the shared traced-jaxpr collective counters (also what
+    # verify.audit_collectives uses to cross-check plan_report)
+    from repro.core.verify import count_collectives
+
     def counts_for(kw):
         def body(k, v, rc):
             tab = T({"k": k, "v": v}, rc[0])
@@ -102,7 +106,8 @@ def _worker_main(argv) -> None:
             jaxpr = str(jax.make_jaxpr(shard_map(
                 body, mesh=mesh, in_specs=(P(ax), P(ax), P(ax)),
                 out_specs=P(ax)))(gk, gv, grc))
-        return jaxpr.count("all_to_all["), jaxpr.count("ppermute[")
+        c = count_collectives(jaxpr)
+        return c["all_to_all"], c["ppermute"]
 
     out = {"rows": cap * WORKERS, "bucket": bucket, "stages": staged_s}
     results = {}

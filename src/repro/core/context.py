@@ -346,8 +346,12 @@ class DistContext:
     def cache_stats(self) -> dict:
         """Plan-cache counter snapshot (hits/misses/evictions/recompiles
         plus residency) — the serving benchmark's warm-path gate reads
-        this before and after a run to assert 0 recompiles."""
-        return self.plan_cache.stats()
+        this before and after a run to assert 0 recompiles. Also carries
+        the plan verifier's ``verify_runs``/``verify_findings`` counters
+        (process-wide; see ``repro.core.verify``)."""
+        from repro.core import verify as V
+
+        return {**self.plan_cache.stats(), **V.counter_snapshot()}
 
     def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
         """Execute per-shard `body` over DistTables under shard_map + jit.

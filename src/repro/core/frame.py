@@ -220,15 +220,33 @@ class LazyFrame:
                            self._ctx.num_shards,
                            [t.stats for t in self._inputs])
 
-    def explain(self, *, optimize: bool = True) -> str:
+    def explain(self, *, optimize: bool = True, verify: bool = False) -> str:
         """The plan tree, one node per line. On an optimized plan every
         potential shuffle is marked ``alltoall``/``elided``; when inputs
         carry stats each node is annotated with estimated rows and any
         cost-model-chosen capacities (``bucket=``, ``out=``,
-        ``cost-sized``) — the audit trail for the physical plan."""
-        plan = self.optimized() if optimize else self._plan
-        return PL.explain(plan, [t.schema for t in self._inputs],
-                          [t.stats for t in self._inputs])
+        ``cost-sized``) — the audit trail for the physical plan.
+
+        ``verify=True`` additionally runs the static plan verifier over
+        the (logical, optimized) pair and appends its findings (or
+        ``verification: clean``) — unlike the ``REPRO_VERIFY_PLANS``
+        gate, this REPORTS instead of raising, so a broken rewrite can
+        be inspected."""
+        schemas = [t.schema for t in self._inputs]
+        stats = [t.stats for t in self._inputs]
+        if not optimize:
+            return PL.explain(self._plan, schemas, stats)
+        # verify=False here: explain must render findings, not raise them
+        plan = PL.optimize(self._plan, schemas, self._ctx.num_shards,
+                           stats, verify=False)
+        text = PL.explain(plan, schemas, stats)
+        if verify:
+            from repro.core import verify as V
+
+            findings = V.verify_plan(self._plan, plan, schemas,
+                                     self._ctx.num_shards, stats)
+            text += "\n" + V.format_findings(findings)
+        return text
 
     def plan_report(self) -> list[dict]:
         """Static shuffle accounting of the optimized plan — one record per

@@ -29,8 +29,8 @@ import jax.numpy as jnp
 
 from repro.core import ops_agg as A
 from repro.core import ops_local as L
-from repro.core.repartition import (ShuffleStats, repartition,
-                                    zero_shuffle_stats)
+from repro.core.repartition import (ShuffleStats, _counts_carrier,
+                                    repartition, zero_shuffle_stats)
 from repro.core.table import Table
 from repro.utils import axis_size
 
@@ -77,6 +77,10 @@ def _shuffle(table: Table, keys: Sequence[str], *, axis_name: str,
             "bucket": 0 if skip else bucket_capacity,
             "wire_bytes": 0 if skip else p * p * bucket_capacity * rb,
             "stages": 0 if skip else stages, "mode": shuffle_mode,
+            # enough shape detail that verify.expected_collectives can
+            # reconstruct the per-column exchange decomposition statically
+            "columns": len(table.columns),
+            "carrier": _counts_carrier(table) is not None,
         })
     if skip:
         return table, zero_shuffle_stats()

@@ -1017,13 +1017,21 @@ def cost_sized_stats_mask(plan: Node) -> list[bool]:
 
 def optimize_with_partitioning(
         plan: Node, input_schemas: Sequence[dict], num_shards: int,
-        input_stats: Sequence | None = None,
+        input_stats: Sequence | None = None, *,
+        verify: bool | None = None,
 ) -> tuple[Node, Partitioning | RangePartitioning | None]:
     """All passes: probe -> predicate pushdown -> limit pushdown ->
     projection pushdown -> shuffle elision -> cost model. Pure
     plan-to-plan; safe to golden-test offline. Also returns the result's
     static placement (one elision walk serves both the rewrite and the
-    output DistTable tag)."""
+    output DistTable tag).
+
+    ``verify`` runs ``repro.core.verify`` over the (logical, optimized)
+    pair and raises ``PlanVerificationError`` on any invariant violation;
+    ``None`` defers to the ``REPRO_VERIFY_PLANS`` env gate (default-on
+    under pytest). The verifier re-optimizes with ``verify=False`` for
+    its idempotence rule, so this never recurses."""
+    logical = plan
     an = _Analysis(input_schemas)
     plan = _annotate_selects(plan, an)
     plan = _pushdown_selects(plan, an)
@@ -1033,13 +1041,20 @@ def optimize_with_partitioning(
     est = _Estimator(an, input_stats if input_stats is not None
                      else [None] * len(input_schemas))
     plan = _apply_costs(plan, est, num_shards)
+    if verify is None or verify:
+        from repro.core import verify as V  # deferred: verify imports us
+
+        if verify or V.verification_enabled():
+            V.verify_or_raise(logical, plan, input_schemas, num_shards,
+                              input_stats)
     return plan, part
 
 
 def optimize(plan: Node, input_schemas: Sequence[dict], num_shards: int,
-             input_stats: Sequence | None = None) -> Node:
+             input_stats: Sequence | None = None, *,
+             verify: bool | None = None) -> Node:
     return optimize_with_partitioning(plan, input_schemas, num_shards,
-                                      input_stats)[0]
+                                      input_stats, verify=verify)[0]
 
 
 def output_partitioning(plan: Node, input_schemas: Sequence[dict],

@@ -35,6 +35,14 @@ Safe-capacity recompiles are cached under their own namespace by the
 caller (``("plan-safe", ...)`` vs ``("plan", ...)``), so the sized and
 conservative executables of one logical plan never collide.
 
+Correctness backstop: the cache only ever replays what ``optimize()``
+produced, and under ``REPRO_VERIFY_PLANS`` every such plan has passed the
+``repro.core.verify`` static rule registry (schema/partitioning/pushdown/
+cost-sizing/idempotence — the idempotence rule also checks the
+``canonical_key`` used here is stable under re-optimization). The
+verifier's ``verify_runs``/``verify_findings`` counters ride alongside
+this cache's counters in ``DistContext.cache_stats()``.
+
 All mutating operations take an internal re-entrant lock, so concurrent
 client threads sharing one ``DistContext`` cannot corrupt the LRU order
 or the counters (two racing misses may both compile; the second ``put``

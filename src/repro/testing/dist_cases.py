@@ -900,6 +900,69 @@ def case_staged_shuffle():
     }
 
 
+def case_verify_audit():
+    """``verify.audit_collectives`` on 8 shards: the static per-record
+    accounting derived from ``plan_report`` must equal the collective
+    counts in the actually-traced fused jaxpr, across every distributed
+    operator family — hash-shuffled groupby chain, sort->join range
+    alignment (sort-merge fast path), sort->window boundary carries,
+    staged and ring explicit repartitions, and a global limit."""
+    from repro.core import verify as V
+    from repro.core.table import Table
+
+    ctx = _ctx()
+    p = ctx.num_shards
+
+    def int_table(n, kr, seed):
+        rng = np.random.default_rng(seed)
+        return Table.from_arrays({
+            "k": rng.integers(0, kr, n).astype(np.int32),
+            "d0": rng.integers(-40, 40, n).astype(np.float32),
+            "d1": rng.integers(-40, 40, n).astype(np.float32)})
+
+    cap, kr = 200, 800
+    orders = ctx.from_local_parts([int_table(cap, kr, 500 + i)
+                                   for i in range(p)])
+    users = ctx.from_local_parts([int_table(cap, kr, 600 + i)
+                                  for i in range(p)])
+    bucket = 2 * cap
+
+    pipelines = {
+        "groupby_chain": (
+            ctx.frame(orders).join(ctx.frame(users), "k",
+                                   bucket_capacity=bucket,
+                                   out_capacity=4 * cap)
+            .select(lambda c: c["d0"] > 0.0, key="pos")
+            .groupby("k", (("d0", "sum"), ("d0", "count")),
+                     strategy="shuffle", bucket_capacity=bucket)),
+        "sort_join_align": (
+            ctx.frame(orders).sort("k", bucket_capacity=bucket)
+            .join(ctx.frame(users), "k", algorithm="sort",
+                  bucket_capacity=bucket, out_capacity=4 * cap)),
+        "sort_window": (
+            ctx.frame(orders).sort(("k", "d1"), bucket_capacity=bucket)
+            .window(("k",), (("rank", None, 0), ("cumsum", "d0", 0)),
+                    order_by=("d1",), bucket_capacity=bucket)),
+        "staged_shuffle": (
+            ctx.frame(orders).partition_by("k", bucket_capacity=bucket,
+                                           stages=3)),
+        "ring_shuffle": (
+            ctx.frame(orders).partition_by("k", bucket_capacity=bucket,
+                                           shuffle_mode="ring")),
+        "sorted_limit": (
+            ctx.frame(orders).sort("k", bucket_capacity=bucket).limit(17)),
+    }
+
+    out = {}
+    for name, fr in pipelines.items():
+        audit = V.audit_collectives(fr, strict=False)
+        out[name] = {"matched": audit["matched"],
+                     "expected": audit["expected"],
+                     "actual": audit["actual"]}
+    out["all_matched"] = all(v["matched"] for v in out.values())
+    return out
+
+
 CASES = {k[5:]: v for k, v in list(globals().items())
          if k.startswith("case_")}
 

@@ -8,6 +8,12 @@ import sys
 # XLA_FLAGS). Keep CI deterministic and CPU-only.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Every optimize() under the suite runs the static plan verifier
+# (repro.core.verify) and fails loudly on invariant violations — the
+# whole tier-1 suite doubles as verifier coverage. Subprocess-based
+# tests (dist_cases, bench workers) inherit the env, so they verify too.
+os.environ.setdefault("REPRO_VERIFY_PLANS", "1")
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 try:

@@ -174,6 +174,24 @@ def test_dist_staged_shuffle():
     assert r["empty_rows"] == 0 and r["empty_overflow"] == 0, r
 
 
+def test_verify_audit_matches_traced_collectives():
+    """The collective auditor on 8 devices: verify.expected_collectives'
+    static per-record accounting equals the collective counts in the
+    actually-traced fused jaxpr, for every distributed operator family
+    (hash groupby chain, sort->join alignment, sort->window carries,
+    staged + ring repartitions, global limit)."""
+    r = run_case("verify_audit")
+    assert r["all_matched"], r
+    # ring decomposes into ppermutes only; staging multiplies AllToAlls
+    assert r["ring_shuffle"]["actual"]["all_to_all"] == 0, r
+    assert r["ring_shuffle"]["actual"]["ppermute"] > 0, r
+    assert (r["staged_shuffle"]["actual"]["all_to_all"]
+            > r["groupby_chain"]["actual"]["all_to_all"]), r
+    # range alignment and window boundary carries pay gathers, not A2As
+    assert r["sort_join_align"]["actual"]["all_gather"] > 0, r
+    assert r["sort_window"]["actual"]["all_gather"] > 0, r
+
+
 def test_serving_async_interleaved_matches_sequential():
     """The serving contract: N interleaved collect_async clients over a
     shared session are bit-identical per query to sequential collects,

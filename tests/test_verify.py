@@ -1,0 +1,380 @@
+"""Plan verifier: every rule has clean-plan and broken-plan coverage.
+
+Static rules run offline (pure plan-to-plan, explicit num_shards=8 — no
+mesh needed), mirroring test_plan's golden style: real optimizer output
+must come back with zero findings, and a hand-mutated violation of each
+registered rule must be caught. The fuzzer's generator is checked for
+seed-determinism, and the wired-in surfaces (optimize() raising under
+``REPRO_VERIFY_PLANS``, ``explain(verify=True)``, ``cache_stats``
+counters) are exercised on the single-device context.
+
+Deliberately hypothesis-free: part of the minimal-environment tier-1 gate.
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as PL
+from repro.core import verify as V
+from repro.core.context import DistContext
+from repro.core.repartition import Partitioning, RangePartitioning
+from repro.core.table import Table
+
+I32, F32 = jnp.dtype(jnp.int32), jnp.dtype(jnp.float32)
+
+ORDERS = {"k": jax.ShapeDtypeStruct((), I32),
+          "o": jax.ShapeDtypeStruct((), I32),
+          "d0": jax.ShapeDtypeStruct((), F32)}
+USERS = {"k": jax.ShapeDtypeStruct((), I32),
+         "v0": jax.ShapeDtypeStruct((), F32)}
+
+P8 = 8
+
+
+def check(logical, schemas=(ORDERS,), p=P8, stats=None):
+    """Optimize + verify; returns (optimized, findings)."""
+    opt = PL.optimize(logical, list(schemas), p, stats, verify=False)
+    return opt, V.verify_plan(logical, opt, list(schemas), p, stats)
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def replace_first(plan, cls, **changes):
+    """dataclasses.replace on the first (preorder) node of type ``cls``."""
+    done = [False]
+
+    def walk(node):
+        if not done[0] and isinstance(node, cls):
+            done[0] = True
+            return dataclasses.replace(node, **changes)
+        kids = PL.children(node)
+        if not kids:
+            return node
+        return PL._with_children(node, tuple(walk(c) for c in kids))
+
+    out = walk(plan)
+    assert done[0], f"no {cls.__name__} in plan"
+    return out
+
+
+# --- clean plans: real optimizer output has zero findings --------------------
+
+
+def test_clean_join_groupby_chain():
+    plan = PL.GroupBy(
+        PL.Select(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                  lambda c: c["d0"] > 0.0, key="pos"),
+        ("k",), (("d0", "sum"), ("d0", "count")), strategy="shuffle")
+    _, findings = check(plan, (ORDERS, USERS))
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_clean_sort_join_window_chain():
+    funcs = (("rank", None, 0), ("cumsum", "d0", 0))
+    plan = PL.Limit(
+        PL.Window(PL.Sort(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)),
+                          ("k", "o")),
+                  ("k",), ("o",), funcs), 9)
+    _, findings = check(plan, (ORDERS, USERS))
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_clean_setop_distinct_repartition():
+    plan = PL.Distinct(PL.Union(
+        PL.Repartition(PL.Scan(0), ("k",), stages=2), PL.Scan(1)))
+    _, findings = check(plan, (ORDERS, ORDERS))
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_clean_under_partitioned_scan():
+    # a pre-partitioned input justifies the elision the optimizer takes
+    tag = Partitioning(("k",), P8, 7)
+    plan = PL.GroupBy(PL.Scan(0, partitioning=tag), ("k",),
+                      (("d0", "sum"),))
+    opt, findings = check(plan)
+    assert opt.skip_shuffle  # the elision actually fired...
+    assert findings == []    # ...and the verifier agrees it is justified
+
+
+# --- rule 1: schema preservation ---------------------------------------------
+
+
+def test_schema_rule_catches_dropped_column():
+    logical = PL.Sort(PL.Scan(0), ("k",))
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    broken = PL.Project(opt, ("k", "o"))  # optimizer "lost" d0
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "schema" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_schema_rule_catches_column_reorder():
+    logical = PL.Sort(PL.Scan(0), ("k",))
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    broken = PL.Project(opt, ("d0", "o", "k"))  # same set, wrong order
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "schema" in rules_of(findings), [str(f) for f in findings]
+
+
+# --- rule 2: partitioning soundness ------------------------------------------
+
+
+def test_partitioning_rule_catches_unjustified_groupby_skip():
+    logical = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),))
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    assert not opt.skip_shuffle  # unpartitioned input: shuffle required
+    broken = replace_first(opt, PL.GroupBy, skip_shuffle=True)
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "partitioning" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_partitioning_rule_catches_unjustified_join_skip():
+    logical = PL.Join(PL.Scan(0), PL.Scan(1), ("k",))
+    opt = PL.optimize(logical, [ORDERS, USERS], P8, verify=False)
+    broken = replace_first(opt, PL.Join, skip_left_shuffle=True)
+    findings = V.verify_plan(logical, broken, [ORDERS, USERS], P8)
+    assert "partitioning" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_partitioning_rule_rejects_forged_range_fingerprint():
+    # Scan tags are INPUT facts. A hand-mutated "optimized" plan whose
+    # Scans claim a range fingerprint the logical plan's inputs never
+    # carried would falsely authorize a ZERO-shuffle range-range join —
+    # silently wrong rows. The forged-provenance check must reject it.
+    logical = PL.Join(PL.Scan(0), PL.Scan(1), ("k",))
+    forged = RangePartitioning(("k",), P8, ("table", 7))
+    tagged = PL.Join(PL.Scan(0, partitioning=forged),
+                     PL.Scan(1, partitioning=forged), ("k",))
+    broken = PL.optimize(tagged, [ORDERS, USERS], P8, verify=False)
+    assert broken.skip_left_shuffle and broken.skip_right_shuffle
+    findings = V.verify_plan(logical, broken, [ORDERS, USERS], P8)
+    assert "partitioning" in rules_of(findings), [str(f) for f in findings]
+    assert any("forged" in f.message for f in findings)
+
+
+def test_partitioning_rule_allows_legitimate_self_join_fingerprint():
+    # The SAME materialized table scanned in two slots legitimately
+    # shares one fingerprint (tokens are unique per table): the skip-both
+    # range-range join is exactly the fast path, not a forgery.
+    part = RangePartitioning(("k",), P8, ("table", 7))
+    logical = PL.Join(PL.Scan(0, partitioning=part),
+                      PL.Scan(1, partitioning=part), ("k",))
+    opt, findings = check(logical, (ORDERS, USERS))
+    assert opt.skip_left_shuffle and opt.skip_right_shuffle
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_partitioning_rule_catches_wrong_seed_elision():
+    tag = Partitioning(("k",), P8, seed=99)  # partitioned under seed 99
+    logical = PL.Repartition(PL.Scan(0, partitioning=tag), ("k",), seed=7)
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    assert not opt.skip_shuffle  # seed mismatch: must re-shuffle
+    broken = replace_first(opt, PL.Repartition, skip_shuffle=True)
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "partitioning" in rules_of(findings)
+
+
+# --- rule 3: pushdown legality -----------------------------------------------
+
+
+def test_pushdown_rule_catches_select_below_window():
+    funcs = (("rank", None, 0),)
+    pred = lambda c: c["rank"] <= 3
+    logical = PL.Select(PL.Window(PL.Scan(0), ("k",), ("o",), funcs),
+                        pred, key="top3", columns=("rank",))
+    # hand-push the select BELOW the window whose output it probes
+    broken = PL.Window(PL.Select(PL.Scan(0), pred, key="top3",
+                                 columns=("rank",)),
+                       ("k",), ("o",), funcs)
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "pushdown" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_pushdown_rule_catches_projection_dropping_probed_column():
+    pred = lambda c: c["d0"] > 0.0
+    logical = PL.Select(PL.Scan(0), pred, key="pos", columns=("d0",))
+    broken = PL.Select(PL.Project(PL.Scan(0), ("k",)), pred, key="pos",
+                       columns=("d0",))
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "pushdown" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_pushdown_rule_catches_limit_crossing_sort():
+    logical = PL.Limit(PL.Sort(PL.Scan(0), ("k",)), 5)  # global top-5
+    broken = PL.Sort(PL.Limit(PL.Scan(0), 5), ("k",))   # head-5, sorted
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "pushdown" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_pushdown_rule_allows_limit_project_swap():
+    # Project is the one node a Limit may legally cross
+    logical = PL.Limit(PL.Project(PL.Scan(0), ("k", "d0")), 5)
+    _, findings = check(logical)
+    assert findings == [], [str(f) for f in findings]
+
+
+# --- rule 4: cost-sizing consistency -----------------------------------------
+
+
+def test_cost_sizing_rule_catches_sized_without_stats():
+    logical = PL.Sort(PL.Scan(0), ("k",))
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    broken = replace_first(opt, PL.Sort, sized=True)  # no stats given
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "cost-sizing" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_cost_sizing_rule_catches_bad_stage_counts():
+    logical = PL.Repartition(PL.Scan(0), ("k",), bucket_capacity=256)
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    for bad in (0, -1, 99):
+        broken = replace_first(opt, PL.Repartition, stages=bad)
+        findings = V.verify_plan(logical, broken, [ORDERS], P8)
+        assert "cost-sizing" in rules_of(findings), (bad, findings)
+
+
+def test_cost_sizing_rule_catches_stages_above_bucket():
+    logical = PL.Repartition(PL.Scan(0), ("k",), bucket_capacity=2)
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    broken = replace_first(opt, PL.Repartition, stages=3)
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "cost-sizing" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_cost_sizing_rule_catches_unresolved_auto_strategy():
+    logical = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),),
+                         strategy="auto")
+    opt = PL.optimize(logical, [ORDERS], P8, verify=False)
+    assert opt.strategy != "auto"  # the optimizer resolves it...
+    broken = replace_first(opt, PL.GroupBy, strategy="auto")
+    findings = V.verify_plan(logical, broken, [ORDERS], P8)
+    assert "cost-sizing" in rules_of(findings)
+
+
+# --- rule 5: idempotence + cache-key stability -------------------------------
+
+
+def test_idempotence_rule_catches_unoptimized_plan():
+    logical = PL.Select(PL.Sort(PL.Scan(0), ("k",)),
+                        lambda c: c["d0"] > 0.0, key="pos")
+    # claim the LOGICAL tree is the optimizer's output: re-optimizing
+    # moves the select below the sort, so the fixed point fails
+    findings = V.verify_plan(logical, logical, [ORDERS], P8)
+    assert "idempotence" in rules_of(findings), [str(f) for f in findings]
+
+
+def test_optimizer_is_idempotent_on_representative_plans():
+    plans = [
+        PL.GroupBy(PL.Join(PL.Scan(0), PL.Scan(1), ("k",)), ("k",),
+                   (("d0", "sum"),)),
+        PL.Limit(PL.Sort(PL.Select(PL.Scan(0), lambda c: c["d0"] > 0.0,
+                                   key="pos"), ("k",)), 7),
+        PL.Window(PL.Sort(PL.Scan(0), ("k", "o")), ("k",), ("o",),
+                  (("rank", None, 0),)),
+    ]
+    for plan in plans:
+        opt = PL.optimize(plan, [ORDERS, USERS], P8, verify=False)
+        re_opt = PL.optimize(opt, [ORDERS, USERS], P8, verify=False)
+        assert re_opt == opt
+        assert PL.canonical_key(re_opt) == PL.canonical_key(opt)
+
+
+# --- totality: the verifier reports on garbage, it never crashes -------------
+
+
+def test_verifier_is_total_on_garbage_plans():
+    logical = PL.GroupBy(PL.Scan(0), ("k",), (("d0", "sum"),))
+    garbage = PL.GroupBy(PL.Scan(5), ("nope",), (("gone", "sum"),))
+    findings = V.verify_plan(logical, garbage, [ORDERS], P8)
+    assert findings  # reported, not raised
+
+
+def test_verify_or_raise_carries_findings():
+    logical = PL.Sort(PL.Scan(0), ("k",))
+    broken = PL.Project(PL.optimize(logical, [ORDERS], P8, verify=False),
+                        ("k",))
+    with pytest.raises(V.PlanVerificationError) as ei:
+        V.verify_or_raise(logical, broken, [ORDERS], P8)
+    assert ei.value.findings
+    assert "schema" in str(ei.value)
+
+
+# --- wiring: env gate, explain, counters -------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return DistContext(axis_name="verify_test")
+
+
+def _small_frame(ctx):
+    rng = np.random.default_rng(3)
+    t = ctx.scatter(Table.from_arrays({
+        "k": rng.integers(0, 8, 64).astype(np.int32),
+        "d0": rng.integers(-9, 9, 64).astype(np.float32)}))
+    return ctx.frame(t)
+
+
+def test_optimize_env_gate_runs_verifier(ctx, monkeypatch):
+    monkeypatch.setenv(V.ENV_FLAG, "1")
+    before = V.counter_snapshot()["verify_runs"]
+    fr = _small_frame(ctx).groupby("k", (("d0", "sum"),))
+    PL.optimize(fr.logical_plan(), [t.schema for t in fr._inputs],
+                ctx.num_shards)
+    assert V.counter_snapshot()["verify_runs"] > before
+    monkeypatch.setenv(V.ENV_FLAG, "0")
+    mid = V.counter_snapshot()["verify_runs"]
+    PL.optimize(fr.logical_plan(), [t.schema for t in fr._inputs],
+                ctx.num_shards)
+    assert V.counter_snapshot()["verify_runs"] == mid  # gate off: no run
+
+
+def test_cache_stats_carries_verifier_counters(ctx):
+    stats = ctx.cache_stats()
+    assert "verify_runs" in stats and "verify_findings" in stats
+
+
+def test_explain_verify_reports_clean(ctx):
+    fr = _small_frame(ctx).groupby("k", (("d0", "sum"),))
+    text = fr.explain(verify=True)
+    assert "verification: clean" in text
+
+
+def test_collect_verified_end_to_end(ctx, monkeypatch):
+    monkeypatch.setenv(V.ENV_FLAG, "1")
+    before = V.counter_snapshot()
+    fr = _small_frame(ctx).sort("k").limit(5)
+    out = fr.collect().to_table().to_numpy()
+    after = V.counter_snapshot()
+    assert after["verify_runs"] > before["verify_runs"]
+    assert after["verify_findings"] == before["verify_findings"]
+    assert len(out["k"]) == 5
+
+
+# --- fuzzer: seed determinism + a single-device end-to-end pass --------------
+
+
+def test_fuzzer_is_seed_deterministic(ctx):
+    from repro.testing import plan_fuzz
+
+    inputs = plan_fuzz.make_inputs(ctx, 5, analyze=False)
+    frames = [plan_fuzz.random_frame(ctx, inputs, random.Random("7:3"),
+                                     max_ops=6) for _ in range(2)]
+    assert frames[0].ops == frames[1].ops
+    keys = [PL.canonical_key(PL.optimize(
+        f.frame.logical_plan(), [t.schema for t in f.frame._inputs],
+        ctx.num_shards, verify=False)) for f in frames]
+    assert keys[0] == keys[1]
+
+
+def test_fuzzer_passes_single_device(ctx):
+    from repro.testing import plan_fuzz
+
+    summary = plan_fuzz.run_fuzz(4, 77, max_ops=4, ctx=ctx)
+    assert summary["plans"] == 4
+    assert summary["verify"]["verify_runs"] > 0
