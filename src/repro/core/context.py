@@ -32,6 +32,7 @@ communication-layer abstraction, preserved.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import weakref
 from typing import Callable, Sequence
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import faults as FLT
 from repro.core import ops_agg as A
 from repro.core import plan as PL
 from repro.core import stats as ST
@@ -49,6 +51,7 @@ from repro.core.repartition import (Partitioning, RangePartitioning,
                                     fresh_range_fingerprint)
 from repro.core.stats import TableStats
 from repro.core.table import KEY_DTYPES, Table
+from repro.kernels import ops as kops
 from repro.utils import ceil_div
 
 
@@ -139,22 +142,32 @@ class PlanFuture:
     next dispatch at zero sync cost).
     """
 
-    def __init__(self, finalize: Callable, overflow_arrays: tuple = ()):
+    def __init__(self, finalize: Callable | None,
+                 overflow_arrays: tuple = ()):
         self._finalize = finalize
         self._overflow = tuple(overflow_arrays)
         self._out = None
+        self._error: BaseException | None = None
         self._lock = threading.Lock()  # resolve-once under concurrent result()
+
+    @classmethod
+    def failed(cls, error: BaseException) -> "PlanFuture":
+        """A future already resolved exceptionally — dispatch failed
+        before anything could be enqueued. ``result()`` re-raises."""
+        fut = cls(None)
+        fut._error = error
+        return fut
 
     @property
     def done(self) -> bool:
-        """True once the result has been verified and materialized."""
-        return self._out is not None
+        """True once resolved — to a verified result OR exceptionally."""
+        return self._out is not None or self._error is not None
 
     def ready(self) -> bool:
         """Best-effort: is the deferred verification now sync-free (every
         overflow counter already on host-reachable memory)? False when the
         runtime cannot tell — callers must treat this as advisory."""
-        if self._out is not None:
+        if self.done:
             return True
         try:
             return all(bool(x.is_ready()) for x in self._overflow)
@@ -163,19 +176,40 @@ class PlanFuture:
 
     def result_with_stats(self):
         """Verified ``(DistTable, per-shuffle stats)`` — blocks on the
-        overflow check (and runs the late safe retry) the first time."""
+        overflow check (and runs the late safe retry) the first time.
+
+        A failed finalization resolves the future exceptionally EXACTLY
+        once: the error is stored under the lock, the finalize closure
+        and overflow counters are dropped (no pinned device buffers, no
+        half-finalized retry on a later call), and every subsequent call
+        re-raises the same error."""
         with self._lock:
+            if self._error is not None:
+                raise self._error
             if self._out is None:
-                self._out = self._finalize()
-                # drop plan/table refs AND the overflow counters once
-                # resolved: a retained future must not pin device buffers
-                self._finalize = None
-                self._overflow = ()
+                try:
+                    self._out = self._finalize()
+                except BaseException as e:
+                    self._error = e
+                    raise
+                finally:
+                    # drop plan/table refs AND the overflow counters once
+                    # resolved: a retained future must not pin device
+                    # buffers, and a failed one must never re-finalize
+                    self._finalize = None
+                    self._overflow = ()
         return self._out
 
     def result(self) -> DistTable:
         """The verified output table (see :meth:`result_with_stats`)."""
         return self.result_with_stats()[0]
+
+
+#: Recovery counters every context tracks (beyond ``overflow_retries``,
+#: kept as its own attribute for backward compatibility). Surfaced in
+#: ``cache_stats()`` and, as before/after deltas, in ``ServingReport``.
+_RECOVERY_KEYS = ("degraded_kernel", "degraded_shuffle", "compile_retries",
+                  "generic_retries", "quarantines", "failed_queries")
 
 
 class DistContext:
@@ -185,10 +219,24 @@ class DistContext:
     ----------
     mesh: the device mesh; defaults to a 1-D mesh over all local devices.
     axis_name: the mesh axis rows shuffle over (must exist in `mesh`).
+    plan_cache: the canonical-plan executable cache (fresh LRU if None).
+    faults: fault injection — a ``repro.core.faults.FaultRegistry``, a
+        sequence of ``FaultPlan``s, or None to arm from the
+        ``REPRO_FAULTS`` env spec (inert when that is unset).
+    retry_policy: bounds + backoff for the recovery ladder
+        (``repro.core.faults.RetryPolicy``; the default never sleeps).
+    validate: post-execution result validation (row-count/received
+        invariants + NaN scan at ``result()`` time). None = auto: on
+        exactly when faults are armed or ``REPRO_VALIDATE`` is set, so
+        the fault-free serving path pays zero extra host syncs.
     """
 
     def __init__(self, mesh: Mesh | None = None, axis_name: str = "shuffle",
-                 plan_cache: PlanCache | None = None):
+                 plan_cache: PlanCache | None = None,
+                 faults: "FLT.FaultRegistry | Sequence[FLT.FaultPlan] | None"
+                 = None,
+                 retry_policy: FLT.RetryPolicy | None = None,
+                 validate: bool | None = None):
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), (axis_name,))
         assert axis_name in mesh.axis_names, (axis_name, mesh.axis_names)
@@ -199,6 +247,18 @@ class DistContext:
         # collect_async/submit alike). LRU with budgets + hit/miss/evict/
         # recompile counters — see repro.core.plan_cache.
         self.plan_cache = plan_cache if plan_cache is not None else PlanCache()
+        if faults is None:
+            faults = FLT.from_env()
+        elif not isinstance(faults, FLT.FaultRegistry):
+            faults = FLT.FaultRegistry(tuple(faults))
+        # the armed fault registry (empty = inert) — every dispatch and
+        # finalization runs under its thread-local scope
+        self.faults = faults if faults is not None else FLT.FaultRegistry()
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else FLT.RetryPolicy()
+        self._validate = validate
+        # recovery-ladder counters (see _RECOVERY_KEYS / cache_stats)
+        self.recovery = {k: 0 for k in _RECOVERY_KEYS}
         # how many cost-sized plans overflowed their estimated capacities
         # and were re-run at conservative sizes (the overflow-retry path)
         self.overflow_retries = 0
@@ -348,10 +408,66 @@ class DistContext:
         plus residency) — the serving benchmark's warm-path gate reads
         this before and after a run to assert 0 recompiles. Also carries
         the plan verifier's ``verify_runs``/``verify_findings`` counters
-        (process-wide; see ``repro.core.verify``)."""
+        (process-wide; see ``repro.core.verify``), this context's
+        recovery-ladder counters (``overflow_retries``,
+        ``degraded_kernel``/``degraded_shuffle``, ``compile_retries``,
+        ``generic_retries``, ``quarantines``, ``failed_queries``) and the
+        fault registry's ``fault_calls``/``fault_fires``."""
         from repro.core import verify as V
 
-        return {**self.plan_cache.stats(), **V.counter_snapshot()}
+        with self._lock:
+            rec = dict(self.recovery)
+            rec["overflow_retries"] = self.overflow_retries
+        return {**self.plan_cache.stats(), **V.counter_snapshot(),
+                **self.faults.stats(), **rec}
+
+    def _bump(self, counter: str, n: int = 1):
+        with self._lock:
+            self.recovery[counter] += n
+
+    # -- result validation (the quarantine gate) ------------------------------
+    def _validation_on(self) -> bool:
+        """Finalize-time result validation costs host syncs (row counts,
+        a NaN scan), so it is opt-in: explicit ``validate=``, the
+        ``REPRO_VALIDATE`` env, or automatically whenever faults are
+        armed (a chaos run must detect its own poison)."""
+        if self._validate is not None:
+            return bool(self._validate)
+        return self.faults.active or \
+            os.environ.get("REPRO_VALIDATE", "") not in ("", "0")
+
+    def _validate_result(self, out: DistTable, stats,
+                         tabs: Sequence[DistTable]) -> list[str]:
+        """Post-execution invariants; non-empty findings quarantine the
+        run (one fully-degraded re-execution). Checks: per-shard row
+        counts within [0, capacity]; every shuffle's received-row total
+        bounded by the rows the inputs could possibly hold (garbled
+        counts decode to absurd totals); no NaN in any valid float cell
+        (kernel/chunk poison). Assumes NaN-free user data — documented
+        with the validation knob."""
+        problems = []
+        p, c = out.num_shards, out.local_capacity
+        rc = np.asarray(out.row_counts)
+        if (rc < 0).any() or (rc > c).any():
+            problems.append(f"row_counts outside [0, {c}]: {rc.tolist()}")
+        cap_total = sum(t.num_shards * t.local_capacity for t in tabs)
+        for i, s in enumerate(stats):
+            recv = int(np.asarray(s.received).sum())
+            if recv < 0 or recv > cap_total:
+                problems.append(f"shuffle {i} received {recv} rows; "
+                                f"inputs hold at most {cap_total}")
+        idx = np.arange(p * c)
+        valid = (idx % c) < np.clip(rc, 0, c)[idx // c]
+        for name, col in sorted(out.columns.items()):
+            if not jnp.issubdtype(col.dtype, jnp.floating):
+                continue
+            # float32 staging keeps the scan clear of ml_dtypes (bf16)
+            # ufunc gaps; any float NaN survives the cast
+            a = np.asarray(col).astype(np.float32)
+            mask = valid.reshape((-1,) + (1,) * (a.ndim - 1))
+            if np.isnan(np.where(mask, a, 0.0)).any():
+                problems.append(f"NaN in column {name!r}")
+        return problems
 
     def _run(self, key, body: Callable, tabs: Sequence[DistTable]):
         """Execute per-shard `body` over DistTables under shard_map + jit.
@@ -363,18 +479,31 @@ class DistContext:
         """
         global_fn = self._make_global(body)
         args = tuple((t.columns, t.row_counts) for t in tabs)
+        sig = jitted = None
         if key is not None:
             sig = (key, tuple(
                 tuple(sorted((k, v.shape, str(v.dtype))
                              for k, v in t.columns.items()))
                 for t in tabs))
             jitted = self.plan_cache.get(sig)
-            if jitted is None:
-                jitted = jax.jit(global_fn)
-                self.plan_cache.put(sig, jitted)
-            cols, rc, stats = jitted(*args)
-        else:
-            cols, rc, stats = jax.jit(global_fn)(*args)
+        cached = jitted is not None
+        if cached and FLT.check("compile") is not None:
+            # injected: the cached executable is corrupt. Drop the entry
+            # here so the ladder's plain retry compiles fresh.
+            self.plan_cache.invalidate(sig)
+            raise FLT.FaultError("compile", "cached executable corrupt")
+        if jitted is None:
+            jitted = jax.jit(global_fn)
+        reg = FLT.current()
+        fires = reg.fire_count() if reg is not None else 0
+        cols, rc, stats = jitted(*args)  # first call on a miss = the trace
+        poisoned = reg is not None and reg.fire_count() != fires
+        if sig is not None and not cached and not poisoned:
+            # admit only AFTER a successful fault-free first call: a trace
+            # that raised (put never reached) or absorbed an injected
+            # fault (poisoned constants baked in) must never leave a
+            # broken executable behind for later cache hits
+            self.plan_cache.put(sig, jitted)
         return DistTable(cols, rc), stats
 
     def submit(self, plan: PL.Node, tabs: Sequence[DistTable], *,
@@ -405,7 +534,7 @@ class DistContext:
         attribution via ``plan.cost_sized_stats_mask`` — overflow on a
         user-set capacity keeps the pre-existing surface-in-stats contract
         and never triggers a retry), the verification runs the safe-
-        capacity recompile ONCE (``execute_plan(..., safe_capacity=True)``,
+        capacity recompile (``execute_plan(..., safe_capacity=True)``,
         cached under its own ``plan-safe`` key) and the future resolves to
         the retried result — never wrong results, because the table is
         only observable through ``result()``. ``self.overflow_retries``
@@ -413,12 +542,39 @@ class DistContext:
         safe plan on later submits, and outputs of a failed-estimate run
         carry NO propagated stats, so downstream stages fall back to
         conservative sizing instead of cascading the bad numbers.
+
+        That overflow retry is one rung of a general recovery LADDER
+        (``repro.core.faults``): every execution attempt runs under
+        :attr:`retry_policy` (bounded attempts, deterministic backoff)
+        and a classified failure degrades the next attempt — Pallas
+        kernel fault -> XLA oracle; staged/ring shuffle fault ->
+        monolithic AllToAll; corrupt cached executable -> fresh compile;
+        a result that fails validation (NaN / invariant violation, when
+        validation is on) is quarantined and re-executed once fully
+        degraded. Degraded executables cache under a ``plan-degraded``
+        namespace so they never collide with the primary ones. A failure
+        that exhausts the ladder resolves the future EXCEPTIONALLY — a
+        dispatch-time error returns an already-failed future rather than
+        raising, so one bad query can never kill a serving loop or
+        poison the pending-fold list; ``result()`` re-raises for its
+        owner alone.
         """
+        try:
+            with FLT.scope(self.faults):
+                return self._submit_impl(plan, tabs, optimize=optimize,
+                                         report=report)
+        except Exception as e:
+            self._bump("failed_queries")
+            return PlanFuture.failed(e)
+
+    def _submit_impl(self, plan: PL.Node, tabs: Sequence[DistTable], *,
+                     optimize: bool, report: list | None) -> PlanFuture:
         p = self.num_shards
         logical = plan
         schemas = [t.schema for t in tabs]
         input_stats = [t.stats for t in tabs]
         have_stats = any(s is not None for s in input_stats)
+        policy = self.retry_policy
         if optimize:
             plan, part = PL.optimize_with_partitioning(
                 plan, schemas, p, input_stats=input_stats)
@@ -443,43 +599,90 @@ class DistContext:
         else:
             run_key = ("plan", key)
         sized = have_stats and PL.plan_cost_sized(plan)
+        safe_memo: dict = {}  # the safe plan is derived at most once
 
-        def run_safe():
-            if optimize:
-                safe_plan, _ = PL.optimize_with_partitioning(
-                    logical, schemas, p)
+        def run_variant(safe: bool, degrade: frozenset):
+            """Execute one ladder rung: the primary or safe-capacity
+            plan, further degraded per ``degrade``. Undegraded runs keep
+            the pre-existing ``plan``/``plan-safe`` cache namespaces;
+            degraded executables get their own ``plan-degraded`` keys."""
+            if safe:
+                if "plan" not in safe_memo:
+                    if optimize:
+                        sp, _ = PL.optimize_with_partitioning(
+                            logical, schemas, p)
+                    else:
+                        sp = PL.apply_cost_model(logical, schemas, p, None)
+                    safe_memo["plan"] = sp
+                v_plan, ns = safe_memo["plan"], "plan-safe"
             else:
-                safe_plan = PL.apply_cost_model(logical, schemas, p, None)
-            safe_key = PL.canonical_key(safe_plan)
-            if safe_key is None:
-                s_ikey = PL.identity_key(safe_plan)
-                safe_run_key = ("plan-safe-id", s_ikey) \
-                    if s_ikey is not None else None
+                v_plan, ns = plan, "plan"
+            if FLT.MONO_SHUFFLE in degrade:
+                v_plan = PL.degrade_shuffles(v_plan)
+            v_key = PL.canonical_key(v_plan)
+            if v_key is not None:
+                base = (ns, v_key)
             else:
-                safe_run_key = ("plan-safe", safe_key)
+                ik = PL.identity_key(v_plan)
+                base = (ns + "-id", ik) if ik is not None else None
+            if base is None:
+                v_run_key = None
+            elif degrade:
+                v_run_key = ("plan-degraded", tuple(sorted(degrade))) + base
+            else:
+                v_run_key = base
 
-            def safe_body(*tables):
+            def body(*tables):
                 return PL.execute_plan(
-                    safe_plan, tables, axis_name=self.axis_name,
-                    num_shards=p, safe_capacity=True)
+                    v_plan, tables, axis_name=self.axis_name, num_shards=p,
+                    report=report if not (safe or degrade) else None,
+                    safe_capacity=safe)
 
-            return self._run(safe_run_key, safe_body, tabs)
+            if FLT.ORACLE_KERNEL in degrade:
+                with kops.oracle_scope():
+                    return self._run(v_run_key, body, tabs)
+            return self._run(v_run_key, body, tabs)
+
+        def run_with_recovery(safe: bool, degrade: frozenset = frozenset()):
+            """Walk the ladder: execute, classify the failure, degrade
+            the next attempt — bounded by the retry policy. Only injected
+            ``FaultError``s ride the ladder; genuine programming errors
+            propagate immediately (retrying them is noise)."""
+            degrade = set(degrade)
+            last = None
+            for attempt in range(1, max(1, policy.max_attempts) + 1):
+                if attempt > 1:
+                    policy.sleep(attempt - 1)
+                try:
+                    out, stats = run_variant(safe, frozenset(degrade))
+                    return out, stats, frozenset(degrade)
+                except FLT.FaultError as e:
+                    last = e
+                    rung = FLT.rung_for(e)
+                    if rung == FLT.ORACLE_KERNEL:
+                        degrade.add(FLT.ORACLE_KERNEL)
+                        self._bump("degraded_kernel")
+                    elif rung == FLT.MONO_SHUFFLE:
+                        degrade.add(FLT.MONO_SHUFFLE)
+                        self._bump("degraded_shuffle")
+                    elif rung == "recompile":
+                        # _run already invalidated the corrupt entry; the
+                        # plain retry recompiles fresh
+                        self._bump("compile_retries")
+                    else:
+                        self._bump("generic_retries")
+            raise RuntimeError(
+                f"plan failed after {policy.max_attempts} attempts "
+                f"(degradations tried: {sorted(degrade)})") from last
 
         with self._lock:
             bad_estimates = sized and run_key is not None \
                 and run_key in self._overflow_bad
-        if bad_estimates:
-            out, stats = run_safe()  # this plan's estimates already failed
-        else:
-            def body(*tables):
-                return PL.execute_plan(plan, tables,
-                                       axis_name=self.axis_name,
-                                       num_shards=p, report=report)
+        # this plan's estimates already failed once -> straight to safe
+        out, stats, degraded = run_with_recovery(safe=bad_estimates)
 
-            out, stats = self._run(run_key, body, tabs)
-
-        def finalize():
-            nonlocal out, stats, bad_estimates
+        def finalize_inner():
+            nonlocal out, stats, bad_estimates, degraded
             if sized and not bad_estimates:
                 mask = PL.cost_sized_stats_mask(plan)
                 if len(mask) != len(stats):  # defensive: never mis-attribute
@@ -492,12 +695,37 @@ class DistContext:
                         self.overflow_retries += 1
                         if run_key is not None:
                             self._overflow_bad.add(run_key)
-                    out, stats = run_safe()
+                    out, stats, degraded = run_with_recovery(
+                        safe=True, degrade=degraded)
+            if self._validation_on():
+                problems = self._validate_result(out, stats, tabs)
+                if problems:
+                    # quarantine: drop the suspect result, re-execute once
+                    # fully degraded (oracle kernels + monolithic
+                    # shuffles — every rung that changes the program)
+                    self._bump("quarantines")
+                    out, stats, degraded = run_with_recovery(
+                        safe=bad_estimates,
+                        degrade=frozenset((FLT.ORACLE_KERNEL,
+                                           FLT.MONO_SHUFFLE)))
+                    problems = self._validate_result(out, stats, tabs)
+                    if problems:
+                        raise RuntimeError(
+                            "result failed validation after degraded "
+                            "re-execution: " + "; ".join(problems))
             est = None
             if have_stats and not bad_estimates:
                 est = PL.estimate_output_stats(plan, schemas, input_stats)
             final = dataclasses.replace(out, partitioning=part, stats=est)
             return final, stats
+
+        def finalize():
+            try:
+                with FLT.scope(self.faults):
+                    return finalize_inner()
+            except Exception:
+                self._bump("failed_queries")
+                raise
 
         # only a cost-sized first pass has anything to verify: everything
         # else resolves without ever touching the host
@@ -505,7 +733,7 @@ class DistContext:
             if sized and not bad_estimates else ()
         fut = PlanFuture(finalize, overflow_arrays)
         self._fold_pending(skip=fut)
-        if overflow_arrays:
+        if overflow_arrays or self._validation_on():
             with self._lock:
                 self._pending.append(weakref.ref(fut))
         return fut
@@ -525,21 +753,36 @@ class DistContext:
             if f is None or f.done or f is skip:
                 continue
             if f.ready():
-                f.result_with_stats()
+                try:
+                    f.result_with_stats()
+                except Exception:
+                    # the error is stored on the future for its OWNER to
+                    # re-raise from result(); a background fold must not
+                    # let one bad query abort an unrelated dispatch
+                    pass
             else:
                 still.append(ref)
         with self._lock:
             self._pending.extend(still)
 
-    def drain(self):
+    def drain(self, raise_errors: bool = True):
         """Block until every outstanding future is verified (the explicit
-        end-of-batch sync for fire-and-forget submitters)."""
+        end-of-batch sync for fire-and-forget submitters). Every future is
+        resolved even when some fail; the collected errors are returned,
+        and the first is re-raised unless ``raise_errors=False``."""
         with self._lock:
             pending, self._pending = self._pending, []
+        errors = []
         for ref in pending:
             f = ref()
             if f is not None:
-                f.result_with_stats()
+                try:
+                    f.result_with_stats()
+                except Exception as e:
+                    errors.append(e)
+        if errors and raise_errors:
+            raise errors[0]
+        return errors
 
     def _run_plan(self, plan: PL.Node, tabs: Sequence[DistTable], *,
                   optimize: bool = False, report: list | None = None):

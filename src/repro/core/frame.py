@@ -220,7 +220,8 @@ class LazyFrame:
                            self._ctx.num_shards,
                            [t.stats for t in self._inputs])
 
-    def explain(self, *, optimize: bool = True, verify: bool = False) -> str:
+    def explain(self, *, optimize: bool = True, verify: bool = False,
+                recovery: bool = False) -> str:
         """The plan tree, one node per line. On an optimized plan every
         potential shuffle is marked ``alltoall``/``elided``; when inputs
         carry stats each node is annotated with estimated rows and any
@@ -231,15 +232,18 @@ class LazyFrame:
         the (logical, optimized) pair and appends its findings (or
         ``verification: clean``) — unlike the ``REPRO_VERIFY_PLANS``
         gate, this REPORTS instead of raising, so a broken rewrite can
-        be inspected."""
+        be inspected. ``recovery=True`` annotates each node with the
+        degradation rungs the retry ladder would apply on failure
+        (``repro.core.faults``)."""
         schemas = [t.schema for t in self._inputs]
         stats = [t.stats for t in self._inputs]
         if not optimize:
-            return PL.explain(self._plan, schemas, stats)
+            return PL.explain(self._plan, schemas, stats,
+                              recovery=recovery)
         # verify=False here: explain must render findings, not raise them
         plan = PL.optimize(self._plan, schemas, self._ctx.num_shards,
                            stats, verify=False)
-        text = PL.explain(plan, schemas, stats)
+        text = PL.explain(plan, schemas, stats, recovery=recovery)
         if verify:
             from repro.core import verify as V
 

@@ -979,6 +979,24 @@ def _node_cost_sized(node: Node) -> bool:
     return getattr(node, "sized", False) or getattr(node, "out_sized", False)
 
 
+def degrade_shuffles(plan: Node) -> Node:
+    """The ``mono-shuffle`` recovery rung: the same plan with every
+    exchange pinned to one monolithic AllToAll (``stages=1``, no ring) —
+    bit-identical results by the staging contract, but none of the
+    pipelined-chunk machinery a ``shuffle.chunk`` fault lives in.
+    ``stages=None`` (cost pick) is pinned too: the degraded run must not
+    re-pick a staged depth."""
+    node = _with_children(plan, [degrade_shuffles(c)
+                                 for c in children(plan)])
+    names = {f.name for f in dataclasses.fields(node)}
+    upd = {}
+    if "stages" in names and node.stages != 1:
+        upd["stages"] = 1
+    if "shuffle_mode" in names and node.shuffle_mode != "alltoall":
+        upd["shuffle_mode"] = "alltoall"
+    return replace(node, **upd) if upd else node
+
+
 def plan_cost_sized(plan: Node) -> bool:
     """True when any capacity in the plan came from a cardinality
     ESTIMATE — the signal that runtime overflow warrants the safe retry."""
@@ -1397,8 +1415,26 @@ def _shuffle_word(skip: bool) -> str:
     return "elided" if skip else "alltoall"
 
 
+def _recovery_rungs(node: Node) -> list[str]:
+    """The degradation rungs that apply to ``node`` should its execution
+    fail — the ``recovery=`` annotation in :func:`explain`."""
+    rungs = []
+    if isinstance(node, (Join, SetOp)):
+        live = not (node.skip_left_shuffle and node.skip_right_shuffle)
+    else:
+        live = not getattr(node, "skip_shuffle", True)
+    if live and any(f.name == "stages" for f in dataclasses.fields(node)):
+        rungs.append("mono-alltoall")
+    if isinstance(node, (GroupBy, Window)):
+        rungs.append("oracle-kernel")
+    if _node_cost_sized(node):
+        rungs.append("safe-capacity")
+    return rungs
+
+
 def explain(plan: Node, input_schemas: Sequence[dict] | None = None,
-            input_stats: Sequence | None = None) -> str:
+            input_stats: Sequence | None = None, *,
+            recovery: bool = False) -> str:
     """Human-readable plan tree (golden-testable): one node per line, with
     every potential shuffle marked ``alltoall`` or ``elided``.
 
@@ -1407,6 +1443,11 @@ def explain(plan: Node, input_schemas: Sequence[dict] | None = None,
     whose capacities the cost model filled in show them (``bucket=``,
     ``out=``, ``cost-sized``) — the audit trail for every physical-
     planning decision. Without statistics the output is unchanged.
+
+    ``recovery=True`` appends each node's applicable degradation rungs
+    (``recovery=mono-alltoall+oracle-kernel+safe-capacity``) — how the
+    retry ladder would re-execute the node after a failure (see
+    ``repro.core.faults``). Off by default so golden plans are stable.
     """
     est = None
     if input_schemas is not None and input_stats is not None \
@@ -1433,6 +1474,10 @@ def explain(plan: Node, input_schemas: Sequence[dict] | None = None,
             s = est.stats(node)
             if s is not None:
                 parts.append(f"~rows={int(round(s.rows))}")
+        if recovery:
+            rungs = _recovery_rungs(node)
+            if rungs:
+                parts.append("recovery=" + "+".join(rungs))
         return (", " + ", ".join(parts)) if parts else ""
 
     def walk(node: Node, depth: int):

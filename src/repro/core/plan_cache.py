@@ -113,9 +113,25 @@ class PlanCache:
     # -- the cache protocol --------------------------------------------------
     def get(self, key):
         """The cached executable, or None. Counts hit/miss and refreshes
-        recency; a miss on a previously-admitted key counts a recompile."""
+        recency; a miss on a previously-admitted key counts a recompile.
+
+        The ``cache.admission`` fault site fires here: a spurious miss
+        (or miss + eviction, mode ``evict``) on a key that IS resident.
+        No recovery ladder — the caller recompiles as for any miss, and
+        the recompile counter records it; injected correctness impact
+        must be nil (the chaos-suite assertion for this site).
+        """
+        from repro.core import faults as FLT
+
+        fp = FLT.check("cache.admission")
         with self._lock:
             entry = self._entries.get(key)
+            if entry is not None and fp is not None:
+                if fp.effective_mode == "evict":
+                    self._entries.pop(key)
+                    self._weight -= entry.weight
+                    self.evictions += 1
+                entry = None  # spurious miss either way
             if entry is None:
                 self.misses += 1
                 if hash(key) in self._ever:

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as FLT
 from repro.core.table import Table
 from repro.core.ops_local import compact
 from repro.kernels import ops as kops
@@ -215,6 +216,41 @@ def staged_all_to_all(buf: jax.Array, axis_name: str, *, stages: int = 1,
         axis=1)
 
 
+def _poison_chunk(recv: jax.Array, width: int) -> jax.Array:
+    """Overwrite the first ``width`` received capacity slots with the NaN
+    bit pattern — the ``shuffle.chunk`` garble/drop fault. Floats become
+    NaN (caught by the finalize NaN scan); a 4-byte carrier's bitcast
+    counts decode to an absurd row count (caught by the received-rows
+    invariant). Either way validation quarantines the run."""
+    if jnp.issubdtype(recv.dtype, jnp.floating):
+        bad = jnp.asarray(jnp.nan, recv.dtype)
+    elif recv.dtype.itemsize == 4:
+        # the float32 quiet-NaN bit pattern, so bitcast counts explode
+        bad = jnp.asarray(np.float32(np.nan).view(np.int32), recv.dtype)
+    else:
+        bad = jnp.asarray(jnp.iinfo(recv.dtype).max, recv.dtype)
+    return recv.at[:, :width].set(bad)
+
+
+def _shuffle_fault(bucket_capacity: int, stages: int,
+                   shuffle_mode: str) -> FLT.FaultPlan | None:
+    """Consult the ``shuffle.chunk`` site for one exchange. Only a
+    pipelined exchange (staged chunks or the ppermute ring) is eligible —
+    the fault models pipelining bugs, so the monolithic-AllToAll recovery
+    rung provably avoids it. Raise-mode aborts the trace here; garble
+    mode returns the plan for :func:`repartition` to poison a received
+    chunk with."""
+    staged = (shuffle_mode == "ring"
+              or len(_chunk_bounds(bucket_capacity, stages)) > 1)
+    if not staged:
+        return None
+    fp = FLT.check("shuffle.chunk")
+    if fp is not None and fp.effective_mode == "raise":
+        raise FLT.FaultError("shuffle.chunk",
+                             f"stages={stages} mode={shuffle_mode}")
+    return fp
+
+
 def _counts_carrier(table: Table) -> str | None:
     """The column whose exchange carries the per-bucket send counts: the
     first (sorted) 4-byte column — the int32 counts bitcast losslessly into
@@ -254,6 +290,11 @@ def repartition(
         jnp.where(valid, part_id, -1), p, cb)  # (p, cb)
     sent = jnp.minimum(hist, cb).astype(jnp.int32)
     carrier = _counts_carrier(table)
+    fault = _shuffle_fault(cb, stages, shuffle_mode)
+    # garble the carrier (or the only exchanged column when none): its
+    # first received chunk — counts slot included — turns to NaN-pattern
+    # bytes, exactly what a lost/corrupt pipeline chunk looks like
+    garble_col = carrier if carrier is not None else table.column_names[0]
 
     recv_cols = {}
     recv_counts = None
@@ -279,6 +320,10 @@ def repartition(
             buf = jnp.concatenate([meta, buf], axis=1)  # (p, cb+1, *rest)
         recv = staged_all_to_all(buf, axis_name, stages=stages,
                                  shuffle_mode=shuffle_mode)
+        if fault is not None and name == garble_col:
+            bounds = _chunk_bounds(buf.shape[1], stages)
+            width = bounds[0][1] if shuffle_mode != "ring" else buf.shape[1]
+            recv = _poison_chunk(recv, width)
         if name == carrier:
             meta_r = recv[:, 0]
             if rest:

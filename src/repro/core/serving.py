@@ -58,6 +58,9 @@ class ServingReport:
     shapes: list[str]          # per-query workload label, submission order
     cache_before: dict
     cache_after: dict
+    # (label, repr(error)) per FAILED query, submission order — a failed
+    # query resolves exceptionally for its owner but never kills the loop
+    errors: list = dataclasses.field(default_factory=list)
 
     @property
     def qps(self) -> float:
@@ -87,19 +90,58 @@ class ServingReport:
         nonzero means the cache budgets are too small for the working set."""
         return self.cache_after["recompiles"] - self.cache_before["recompiles"]
 
+    @property
+    def failed(self) -> int:
+        """Queries that resolved exceptionally during the run."""
+        return len(self.errors)
+
+    def _delta(self, key: str) -> int:
+        # recovery counters appeared after the first report consumers;
+        # .get keeps old snapshots (tests, serialized reports) readable
+        return int(self.cache_after.get(key, 0)) \
+            - int(self.cache_before.get(key, 0))
+
+    @property
+    def retries(self) -> int:
+        """Recovery-ladder attempts taken during the run: overflow-safe
+        recompiles + compile retries + generic retries."""
+        return (self._delta("overflow_retries")
+                + self._delta("compile_retries")
+                + self._delta("generic_retries"))
+
+    @property
+    def degraded(self) -> int:
+        """Queries that fell back to a degraded execution path (XLA
+        oracle kernels and/or monolithic AllToAll shuffles)."""
+        return self._delta("degraded_kernel") + self._delta("degraded_shuffle")
+
+    @property
+    def quarantines(self) -> int:
+        """Results that failed validation and were re-executed degraded."""
+        return self._delta("quarantines")
+
     def to_dict(self) -> dict:
         return {"mode": self.mode, "clients": self.num_clients,
                 "queries": self.num_queries,
                 "elapsed_s": self.elapsed_s, "qps": self.qps,
                 "p50_ms": self.p50_ms, "p99_ms": self.p99_ms,
                 "compiles": self.compiles, "recompiles": self.recompiles,
+                "failed": self.failed, "retries": self.retries,
+                "degraded": self.degraded, "quarantines": self.quarantines,
+                "errors": list(self.errors),
                 "cache": dict(self.cache_after)}
 
     def summary(self) -> str:
+        recov = ""
+        if self.failed or self.retries or self.degraded or self.quarantines:
+            recov = (f", {self.failed} failed / {self.retries} retries / "
+                     f"{self.degraded} degraded / "
+                     f"{self.quarantines} quarantined")
         return (f"[{self.mode}] {self.num_queries} queries / "
                 f"{self.num_clients} clients: {self.qps:.1f} q/s, "
                 f"p50 {self.p50_ms:.1f}ms, p99 {self.p99_ms:.1f}ms, "
-                f"{self.compiles} compiles ({self.recompiles} recompiles)")
+                f"{self.compiles} compiles ({self.recompiles} recompiles)"
+                + recov)
 
 
 class ServingSession:
@@ -179,23 +221,38 @@ class ServingSession:
         before = self.ctx.cache_stats()
         results: list[DistTable | None] = [None] * len(queries)
         latencies: list[float] = [0.0] * len(queries)
+        errors: list[tuple[str, str]] = []
 
         def resolve(i: int, t_submit: float, fut: PlanFuture):
-            out = fut.result()
-            jax.block_until_ready(out.columns)
+            # a query that exhausted its recovery ladder resolves
+            # exceptionally; record it and keep serving — one bad query
+            # must never kill the session or the other clients' results
+            try:
+                out = fut.result()
+                jax.block_until_ready(out.columns)
+                results[i] = out
+            except Exception as e:
+                errors.append((queries[i][0], repr(e)))
             latencies[i] = time.perf_counter() - t_submit
-            results[i] = out
+
+        def dispatch(builder) -> PlanFuture:
+            # plan-level failures already come back as pre-failed futures
+            # (DistContext.submit never raises); this guards the BUILDER
+            try:
+                return self.submit(builder)
+            except Exception as e:
+                return PlanFuture.failed(e)
 
         t0 = time.perf_counter()
         if mode == "sequential":
             for i, (label, builder) in enumerate(queries):
                 t = time.perf_counter()
-                resolve(i, t, self.submit(builder))
+                resolve(i, t, dispatch(builder))
         else:
             in_flight: list[tuple[int, float, PlanFuture]] = []
             for i, (label, builder) in enumerate(queries):
                 t = time.perf_counter()
-                in_flight.append((i, t, self.submit(builder)))
+                in_flight.append((i, t, dispatch(builder)))
                 if len(in_flight) >= self.max_in_flight:
                     resolve(*in_flight.pop(0))
             for item in in_flight:
@@ -206,5 +263,6 @@ class ServingSession:
             mode=mode, num_clients=num_clients, num_queries=len(queries),
             elapsed_s=elapsed, latencies_s=latencies,
             shapes=[label for label, _ in queries],
-            cache_before=before, cache_after=self.ctx.cache_stats())
+            cache_before=before, cache_after=self.ctx.cache_stats(),
+            errors=errors)
         return report, results

@@ -185,9 +185,20 @@ def with_skew_margin(mean: float) -> int:
     """Slot budget for an expected occupancy of ``mean`` rows: the mean
     plus ~4 Poisson standard deviations plus a small-count floor. Tighter
     than a fixed multiple at scale, safe at small counts — and every
-    consumer is backed by the overflow-retry path regardless."""
+    consumer is backed by the overflow-retry path regardless.
+
+    The ``stats.estimate`` fault site lives here: an armed fault derates
+    the budget (divides by ``FaultPlan.factor``), modeling a badly wrong
+    cardinality estimate — the chaos probe for the overflow-retry rung.
+    """
     mean = max(mean, 0.0)
-    return max(1, math.ceil(mean + 4.0 * math.sqrt(mean) + 4.0))
+    budget = max(1, math.ceil(mean + 4.0 * math.sqrt(mean) + 4.0))
+    from repro.core import faults as FLT
+
+    fp = FLT.check("stats.estimate")
+    if fp is not None:
+        budget = max(1, int(budget // max(fp.factor, 1.0)))
+    return budget
 
 
 def size_bucket(source_rows: float, p: int, factor: float = 1.0) -> int:

@@ -184,13 +184,18 @@ class Prefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._it = iter(it)
         self._done = object()
+        self._error: BaseException | None = None
         self._thread = threading.Thread(target=self._fill, daemon=True)
         self._thread.start()
 
     def _fill(self):
+        # a crash in the source iterator must surface in the CONSUMER,
+        # not vanish into the worker thread as a silent early end-of-data
         try:
             for item in self._it:
                 self._q.put(item)
+        except BaseException as e:
+            self._error = e
         finally:
             self._q.put(self._done)
 
@@ -200,5 +205,7 @@ class Prefetcher:
     def __next__(self):
         item = self._q.get()
         if item is self._done:
+            if self._error is not None:
+                raise self._error
             raise StopIteration
         return item

@@ -7,10 +7,13 @@ place. Off-TPU everything runs with interpret=True (bit-exact semantics).
 from __future__ import annotations
 
 import functools
+import threading
+from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults as FLT
 from repro.kernels import ref
 from repro.kernels.bitonic import DEFAULT_TILE, bitonic_sort_tiles
 from repro.kernels.hash64 import hash32
@@ -27,7 +30,49 @@ __all__ = [
     "segment_reduce",
     "segment_scan",
     "key_max",
+    "oracle_scope",
+    "oracle_only",
 ]
+
+
+# -- the kernel -> XLA-oracle degradation rung -------------------------------
+# DistContext's recovery ladder re-executes a failed plan with every Pallas
+# segment kernel swapped for its bit-identical XLA oracle. The flag is
+# thread-local and consulted at TRACE time (resolution below happens
+# outside the inner jits, so it always takes effect — a cached trace of
+# the kernel path cannot shadow it).
+
+_oracle = threading.local()
+
+
+def oracle_only() -> bool:
+    """True while the calling thread is inside :func:`oracle_scope`."""
+    return getattr(_oracle, "depth", 0) > 0
+
+
+@contextmanager
+def oracle_scope():
+    """Force every segment kernel to its XLA oracle on this thread — the
+    ``oracle-kernel`` recovery rung (bit-identical on the integer-valued
+    inputs the engine produces)."""
+    _oracle.depth = getattr(_oracle, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _oracle.depth -= 1
+
+
+def _kernel_fault(out: jax.Array) -> jax.Array:
+    """Apply an armed ``kernel.dispatch`` fault: raise, or return ``out``
+    NaN-poisoned (floats only — result validation detects the NaNs and
+    quarantines the run). No-op when no fault fires."""
+    fp = FLT.check("kernel.dispatch")
+    if fp is None:
+        return out
+    mode = fp.effective_mode
+    if mode == "nan" and jnp.issubdtype(out.dtype, jnp.floating):
+        return jnp.full_like(out, jnp.nan)
+    raise FLT.FaultError("kernel.dispatch", f"mode={mode}")
 
 
 def hash_columns(columns: list[jax.Array], seed: int = 0) -> jax.Array:
@@ -51,7 +96,6 @@ def key_max(dtype) -> jax.Array:
     return jnp.array(jnp.iinfo(dtype).max, dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "op", "use_kernel"))
 def segment_reduce(
     values: jax.Array,
     seg_ids: jax.Array,
@@ -76,6 +120,11 @@ def segment_reduce(
     runs AS a kernel; under interpret mode (no TPU — tests, CPU CI) the
     emulated multi-tile one-hot is far slower than XLA scatter, so auto
     only takes the kernel path for single-tile segment counts there.
+
+    Resolution happens HERE, outside the jit: :func:`oracle_scope` (the
+    recovery ladder) overrides any choice to the XLA path, and an armed
+    ``kernel.dispatch`` fault acts only when the kernel path is taken —
+    so a degraded re-execution provably avoids the faulted site.
     """
     assert op in ("sum", "min", "max"), op
     assert seg_ids.ndim == 1 and values.shape[0] == seg_ids.shape[0], (
@@ -89,6 +138,14 @@ def segment_reduce(
             f"segment_reduce kernel needs 1-D f32/i32 values; got "
             f"shape={values.shape} dtype={values.dtype}. Use "
             f"use_kernel=None for the XLA fallback.")
+    if use_kernel and oracle_only():
+        use_kernel = False
+    out = _segment_reduce_jit(values, seg_ids, num_segments, op, use_kernel)
+    return _kernel_fault(out) if use_kernel else out
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "use_kernel"))
+def _segment_reduce_jit(values, seg_ids, num_segments, op, use_kernel):
     if use_kernel:
         return segment_reduce_tiles(values, seg_ids, num_segments, op)
     init = ref.seg_init(op, values.dtype)
@@ -101,8 +158,6 @@ def segment_reduce(
     return scatter(values, mode="drop")
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("op", "inclusive", "use_kernel"))
 def segment_scan(
     values: jax.Array,
     seg_ids: jax.Array,
@@ -137,6 +192,15 @@ def segment_scan(
             f"segment_scan kernel needs 1-D f32/i32 values; got "
             f"shape={values.shape} dtype={values.dtype}. Use "
             f"use_kernel=None for the XLA fallback.")
+    if use_kernel and oracle_only():
+        use_kernel = False
+    out = _segment_scan_jit(values, seg_ids, op, inclusive, use_kernel)
+    return _kernel_fault(out) if use_kernel else out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "inclusive", "use_kernel"))
+def _segment_scan_jit(values, seg_ids, op, inclusive, use_kernel):
     if use_kernel:
         return segment_scan_tiles(values, seg_ids, op, inclusive=inclusive)
     return ref.segment_scan_ref(values, seg_ids, op, inclusive)

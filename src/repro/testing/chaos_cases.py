@@ -1,0 +1,263 @@
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+"""Chaos test cases: seeded fault injection vs. the recovery ladder.
+
+``python -m repro.testing.chaos_cases <case>`` prints one JSON dict; the
+pytest wrappers (tests/test_chaos.py) assert on it. Every case arms one
+fault class (``repro.core.faults``) on an 8-shard world and checks three
+things against the fault-free oracle run:
+
+* the query still completes — through the documented recovery rung for
+  that failure class (XLA oracle, monolithic AllToAll, safe capacity,
+  recompile, quarantine + degraded re-execute);
+* the recovered result is BIT-IDENTICAL to the fault-free result (data
+  is integer-valued float32 so kernel and oracle paths agree exactly);
+* the recovery counters in ``ctx.cache_stats()`` record exactly what
+  happened (which rung, how many fires, no unbounded retries).
+"""
+import json
+import sys
+
+import numpy as np
+
+
+def _ctx(faults=None, retry=None):
+    from repro.core import faults as FLT
+    from repro.core.context import DistContext
+    return DistContext(faults=faults,
+                       retry_policy=retry or FLT.RetryPolicy())
+
+
+def _orders(n_per_shard=400, keys=57, seed=11):
+    from repro.core.table import Table
+    rng = np.random.default_rng(seed)
+    n = n_per_shard * 8
+    return Table.from_arrays({
+        "k": rng.integers(0, keys, n).astype(np.int32),
+        "d0": rng.integers(-50, 50, n).astype(np.float32),
+        "d1": rng.integers(0, 1000, n).astype(np.int32)})
+
+
+def _rows(dt):
+    return sorted(dt.to_table().to_rows())
+
+
+def _bitwise(a, b):
+    from repro.testing.compare import tables_bitwise_equal
+    return tables_bitwise_equal(a.to_table(), b.to_table())
+
+
+def case_shuffle_recovery():
+    """shuffle.chunk faults on staged AND ring shuffles: a raised chunk
+    degrades to the monolithic AllToAll rung; a garbled chunk is caught
+    by result validation and quarantined into a degraded re-execute.
+    Either way the result is bit-identical to the fault-free shuffle."""
+    from repro.core import faults as FLT
+
+    t = _orders()
+    out = {}
+    for mode_name, kw in (("staged", {"stages": 3}),
+                          ("ring", {"shuffle_mode": "ring"})):
+        ctx0 = _ctx()
+        ref, _ = ctx0.partition_by(ctx0.scatter(t), "k",
+                                   bucket_capacity=1024, **kw)
+        ref_rows = _rows(ref)
+        for fmode in ("raise", "garble"):
+            ctx = _ctx(faults=[FLT.FaultPlan("shuffle.chunk", mode=fmode,
+                                             nth=1)])
+            got, _ = ctx.partition_by(ctx.scatter(t), "k",
+                                      bucket_capacity=1024, **kw)
+            cs = ctx.cache_stats()
+            tag = f"{mode_name}_{fmode}"
+            out[f"{tag}_identical"] = _rows(got) == ref_rows
+            out[f"{tag}_fires"] = cs["fault_fires"]
+            out[f"{tag}_degraded_shuffle"] = cs["degraded_shuffle"]
+            out[f"{tag}_quarantines"] = cs["quarantines"]
+            out[f"{tag}_failed"] = cs["failed_queries"]
+    out["all_identical"] = all(v for k, v in out.items()
+                               if k.endswith("_identical"))
+    return out
+
+
+def case_kernel_recovery():
+    """kernel.dispatch faults on a distributed GroupBy: a raising kernel
+    degrades to the XLA oracle rung at dispatch; a NaN-poisoned kernel
+    output is caught by validation at finalize and quarantined into a
+    fully degraded re-execute. Bit-identical both ways (integer-valued
+    float32 keeps kernel and oracle sums exactly equal)."""
+    from repro.core import faults as FLT
+
+    t = _orders()
+    ctx0 = _ctx()
+    ref, _ = ctx0.groupby(ctx0.scatter(t), "k",
+                          (("d0", "sum"), ("d0", "count")))
+    ref_rows = _rows(ref)
+    # nan poison needs a FLOAT kernel output (an int aggregate raises
+    # instead — NaN isn't expressible there), so it gets its own query
+    ctx0b = _ctx()
+    nan_ref, _ = ctx0b.groupby(ctx0b.scatter(t), "k", (("d0", "sum"),))
+    nan_ref_rows = _rows(nan_ref)
+    out = {}
+    for fmode, rung_counter, aggs, want in (
+            ("raise", "degraded_kernel",
+             (("d0", "sum"), ("d0", "count")), ref_rows),
+            ("nan", "quarantines", (("d0", "sum"),), nan_ref_rows)):
+        ctx = _ctx(faults=[FLT.FaultPlan("kernel.dispatch", mode=fmode,
+                                         nth=1)])
+        got, _ = ctx.groupby(ctx.scatter(t), "k", aggs)
+        cs = ctx.cache_stats()
+        out[f"{fmode}_identical"] = _rows(got) == want
+        out[f"{fmode}_fires"] = cs["fault_fires"]
+        out[f"{fmode}_rung"] = cs[rung_counter]
+        out[f"{fmode}_failed"] = cs["failed_queries"]
+    # persistent fault: every kernel dispatch raises, forever — the
+    # oracle rung must still recover within the bounded ladder
+    ctx = _ctx(faults=[FLT.FaultPlan("kernel.dispatch", probability=1.0,
+                                     max_fires=10_000)],
+               retry=FLT.RetryPolicy(max_attempts=3))
+    got, _ = ctx.groupby(ctx.scatter(t), "k",
+                         (("d0", "sum"), ("d0", "count")))
+    cs = ctx.cache_stats()
+    out["persistent_identical"] = _rows(got) == ref_rows
+    out["persistent_degraded"] = cs["degraded_kernel"]
+    out["persistent_failed"] = cs["failed_queries"]
+    return out
+
+
+def case_stats_overflow_recovery():
+    """stats.estimate fault: the sizing budget is derated 64x under an
+    analyzed (cost-sized) plan, forcing real bucket overflow — recovered
+    by the safe-capacity rung (overflow_retries), result bit-identical
+    to the un-derated run, and the plan key is remembered as bad so the
+    SECOND submit goes straight to the safe plan (no second retry)."""
+    from repro.core import faults as FLT
+
+    t = _orders(keys=97)
+    ctx0 = _ctx()
+    ref, _ = ctx0.groupby(ctx0.analyze(ctx0.scatter(t)), "k",
+                          (("d0", "sum"),), strategy="shuffle")
+    ref_rows = _rows(ref)
+    ctx = _ctx(faults=[FLT.FaultPlan("stats.estimate", probability=1.0,
+                                     max_fires=10_000, factor=64.0)])
+    dt = ctx.analyze(ctx.scatter(t))
+    got, _ = ctx.groupby(dt, "k", (("d0", "sum"),), strategy="shuffle")
+    first = ctx.cache_stats()
+    got2, _ = ctx.groupby(dt, "k", (("d0", "sum"),), strategy="shuffle")
+    second = ctx.cache_stats()
+    return {"identical": _rows(got) == ref_rows,
+            "identical_second": _rows(got2) == ref_rows,
+            "overflow_retries": first["overflow_retries"],
+            "second_submit_retries": second["overflow_retries"]
+            - first["overflow_retries"],
+            "fires": first["fault_fires"] > 0,
+            "failed": second["failed_queries"]}
+
+
+def case_cache_and_compile():
+    """cache.admission + compile faults. A spurious miss/evict recovers
+    by natural recompile (results identical, recompile counter records
+    it). A corrupt cached executable raises at dispatch; the ladder
+    invalidates the entry and retries with a fresh compile."""
+    from repro.core import faults as FLT
+
+    t = _orders()
+    ctx0 = _ctx()
+    ref, _ = ctx0.groupby(ctx0.scatter(t), "k", (("d0", "sum"),))
+    ref_rows = _rows(ref)
+    out = {}
+    for fmode in ("miss", "evict"):
+        ctx = _ctx(faults=[FLT.FaultPlan("cache.admission", mode=fmode,
+                                         nth=2)])  # warm hit is call 2
+        dt = ctx.scatter(t)
+        a, _ = ctx.groupby(dt, "k", (("d0", "sum"),))
+        b, _ = ctx.groupby(dt, "k", (("d0", "sum"),))
+        cs = ctx.cache_stats()
+        out[f"{fmode}_identical"] = _rows(a) == ref_rows \
+            and _rows(b) == ref_rows
+        out[f"{fmode}_fires"] = cs["fault_fires"]
+        out[f"{fmode}_recompiles"] = cs["recompiles"]
+        out[f"{fmode}_failed"] = cs["failed_queries"]
+    ctx = _ctx(faults=[FLT.FaultPlan("compile", nth=1)])
+    dt = ctx.scatter(t)
+    a, _ = ctx.groupby(dt, "k", (("d0", "sum"),))
+    b, _ = ctx.groupby(dt, "k", (("d0", "sum"),))  # fires on the warm hit
+    cs = ctx.cache_stats()
+    out["compile_identical"] = _rows(a) == ref_rows \
+        and _rows(b) == ref_rows
+    out["compile_retries"] = cs["compile_retries"]
+    out["compile_failed"] = cs["failed_queries"]
+    return out
+
+
+def case_serving_survival():
+    """A ServingSession open loop survives faults injected mid-workload:
+    a kernel fault degrades one query to the oracle rung, a broken query
+    builder resolves its future exceptionally — and in BOTH cases every
+    other query completes bit-identical to the fault-free loop, the
+    session and plan cache stay healthy, and the report surfaces the
+    failure/recovery counters."""
+    from repro.core import faults as FLT
+    from repro.core.serving import ServingSession
+
+    t = _orders(keys=64)
+    workload = [
+        ("gb", lambda s: s.frame("orders")
+            .groupby("k", (("d0", "sum"), ("d0", "count")))),
+        ("sel", lambda s: s.frame("orders")
+            .select(lambda c: c["d0"] > 0.0, key=("pos",))
+            .groupby("k", (("d0", "sum"),))),
+        ("sort", lambda s: s.frame("orders").sort("k").limit(16)),
+    ]
+
+    def loop(ctx, wl):
+        sess = ServingSession(ctx, max_in_flight=4)
+        sess.register("orders", t)
+        return sess.run_open_loop(wl, num_clients=3, queries_per_client=2,
+                                  mode="async")
+
+    ref_rep, ref_res = loop(_ctx(), workload)
+
+    # kernel fault fires once mid-loop -> one query degrades, all succeed
+    ctx1 = _ctx(faults=[FLT.FaultPlan("kernel.dispatch", probability=1.0,
+                                      max_fires=1)])
+    rep1, res1 = loop(ctx1, workload)
+    identical1 = all(a is not None and _bitwise(a, b)
+                     for a, b in zip(res1, ref_res))
+
+    # a broken builder -> exactly that query fails, the loop keeps going
+    def boom(_s):
+        raise ValueError("client bug")
+    wl2 = list(workload) + [("boom", boom)]
+    rep2, res2 = loop(_ctx(), wl2)
+    ok2 = [r is not None for r in res2]
+    return {
+        "fault_all_succeeded": identical1,
+        "fault_failed": rep1.failed,
+        "fault_degraded": rep1.degraded + rep1.quarantines,
+        "fault_retries_bounded": rep1.retries + rep1.degraded
+        + rep1.quarantines <= rep1.num_queries,
+        "boom_failed": rep2.failed,
+        "boom_failed_labels": sorted({lbl for lbl, _ in rep2.errors}),
+        "boom_succeeded": sum(ok2),
+        "boom_queries": rep2.num_queries,
+        "ref_failed": ref_rep.failed,
+    }
+
+
+CASES = {k[5:]: v for k, v in list(globals().items())
+         if k.startswith("case_")}
+
+
+def main():
+    case = sys.argv[1]
+    out = CASES[case]()
+    print("JSON:" + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

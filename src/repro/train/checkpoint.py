@@ -14,6 +14,12 @@ Production contract (DESIGN.md §6):
   a background thread so the train loop is not blocked.
 * **Retention** — keep the last N checkpoints; deletion only after a newer
   commit succeeds.
+* **Corruption detection + fallback** — every leaf's byte length and
+  crc32 go into the manifest at save time; ``restore`` verifies them and
+  raises :class:`CheckpointCorruptError` on any truncated / bit-flipped /
+  missing leaf, and :meth:`CheckpointManager.resume` falls back to the
+  newest checkpoint that DOES verify (loud ``warnings.warn``, never a
+  silent load of garbage weights).
 """
 from __future__ import annotations
 
@@ -21,12 +27,18 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed its integrity check (truncated or corrupt)."""
 
 
 def _leaf_paths(tree):
@@ -64,9 +76,11 @@ def save(ckpt_dir: str, step: int, state: Any, *, keep: int = 3,
                 arr = arr.view(np.uint16 if arr.dtype.itemsize == 2
                                else np.uint8)
             np.save(os.path.join(tmp, fn), arr)
+            raw = np.ascontiguousarray(arr)
             manifest["leaves"].append(
                 {"file": fn, "shape": list(np.shape(leaf)),
-                 "dtype": logical})
+                 "dtype": logical, "nbytes": int(raw.nbytes),
+                 "crc32": zlib.crc32(raw.tobytes()) & 0xFFFFFFFF})
         with open(os.path.join(tmp, MANIFEST), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -91,12 +105,24 @@ def _retain(ckpt_dir: str, keep: int):
                       ignore_errors=True)
 
 
+def _readable_manifest(path: str) -> bool:
+    """True when the manifest parses — a half-written / truncated JSON
+    (crash outside the atomic-rename window, disk fault) marks the whole
+    step unreadable rather than exploding later in ``restore``."""
+    try:
+        with open(path) as f:
+            json.load(f)
+        return True
+    except (OSError, ValueError):
+        return False
+
+
 def list_steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for d in os.listdir(ckpt_dir):
-        if d.startswith("step_") and os.path.exists(
+        if d.startswith("step_") and _readable_manifest(
                 os.path.join(ckpt_dir, d, MANIFEST)):
             out.append(int(d[len("step_"):]))
     return sorted(out)
@@ -118,15 +144,36 @@ def restore(ckpt_dir: str, step: int, like: Any, *, mesh=None, specs=None
     from jax.sharding import NamedSharding
 
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, MANIFEST)) as f:
-        manifest = json.load(f)
+    try:
+        with open(os.path.join(d, MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"step {step}: unreadable manifest ({e})") from e
     leaves_meta = manifest["leaves"]
     flat, treedef = jax.tree.flatten(like)
     assert len(flat) == len(leaves_meta), \
         f"tree mismatch: {len(flat)} leaves vs {len(leaves_meta)} in ckpt"
 
     def _load(m):
-        arr = np.load(os.path.join(d, m["file"]))
+        try:
+            arr = np.load(os.path.join(d, m["file"]))
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {m['file']} unreadable ({e})") from e
+        # length + crc verification against the manifest written at save
+        # time; manifests from before digests existed verify trivially
+        if "nbytes" in m:
+            raw = np.ascontiguousarray(arr)
+            if int(raw.nbytes) != int(m["nbytes"]):
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {m['file']} truncated "
+                    f"({raw.nbytes} bytes, manifest says {m['nbytes']})")
+            crc = zlib.crc32(raw.tobytes()) & 0xFFFFFFFF
+            if crc != int(m["crc32"]):
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {m['file']} fails crc32 "
+                    f"({crc:#x} != {int(m['crc32']):#x})")
         if m["dtype"] not in (str(arr.dtype),):
             import ml_dtypes
             arr = arr.view(np.dtype(getattr(ml_dtypes, m["dtype"], m["dtype"])))
@@ -167,8 +214,25 @@ class CheckpointManager:
             self._pending = None
 
     def resume(self, like, *, mesh=None, specs=None):
-        """(state, step) from the newest checkpoint, or (None, 0)."""
-        step = latest_step(self.dir)
-        if step is None:
-            return None, 0
-        return restore(self.dir, step, like, mesh=mesh, specs=specs), step
+        """(state, step) from the newest checkpoint that VERIFIES, or
+        (None, 0). A truncated/corrupt newest checkpoint (e.g. the disk
+        died mid-retention, bit rot) is skipped with a loud warning and
+        the next-newest retained step is tried — resuming slightly older
+        beats crashing, and far beats loading garbage weights."""
+        bad = []
+        for step in reversed(list_steps(self.dir)):
+            try:
+                state = restore(self.dir, step, like, mesh=mesh, specs=specs)
+            except CheckpointCorruptError as e:
+                bad.append(step)
+                warnings.warn(
+                    f"checkpoint step {step} is corrupt, trying an older "
+                    f"one: {e}", RuntimeWarning, stacklevel=2)
+                continue
+            if bad:
+                warnings.warn(
+                    f"resumed from step {step}; corrupt step(s) "
+                    f"{sorted(bad)} were skipped", RuntimeWarning,
+                    stacklevel=2)
+            return state, step
+        return None, 0

@@ -1,0 +1,347 @@
+"""Fault injection + recovery-ladder tests.
+
+Two layers:
+
+* single-device unit tests of ``repro.core.faults`` (deterministic
+  firing, the ``REPRO_FAULTS`` spec parser, retry/backoff math) and of
+  the ``PlanFuture`` failure paths (exceptional resolution exactly once,
+  no broken executable left in the plan cache);
+* subprocess chaos cases on 8 host devices
+  (``repro.testing.chaos_cases``): every injected fault class must
+  recover through its documented ladder rung with results bit-identical
+  to the fault-free oracle, and a ServingSession open loop must survive
+  mid-workload failures with only the affected query impacted.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_case(case: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.testing.chaos_cases", case],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"{case} failed:\n{out.stdout}\n{out.stderr}"
+    line = [l for l in out.stdout.splitlines() if l.startswith("JSON:")][-1]
+    return json.loads(line[5:])
+
+
+# --------------------------------------------------------------------------
+# the fault registry (single device, no jax needed)
+# --------------------------------------------------------------------------
+
+
+def test_fault_plan_validation():
+    from repro.core import faults as FLT
+
+    with pytest.raises(ValueError):
+        FLT.FaultPlan("no.such.site")
+    with pytest.raises(ValueError):
+        FLT.FaultRegistry([FLT.FaultPlan("compile"),
+                           FLT.FaultPlan("compile")])  # duplicate site
+
+
+def test_registry_nth_and_max_fires():
+    from repro.core import faults as FLT
+
+    reg = FLT.FaultRegistry([FLT.FaultPlan("compile", nth=2, max_fires=1)])
+    with FLT.scope(reg):
+        fires = [FLT.check("compile") is not None for _ in range(5)]
+    assert fires == [False, True, False, False, False]
+    assert reg.stats() == {"fault_calls": 5, "fault_fires": 1}
+    assert reg.fires_by_site() == {"compile": 1}
+    reg.reset()
+    assert reg.stats() == {"fault_calls": 0, "fault_fires": 0}
+
+
+def test_registry_probability_deterministic():
+    from repro.core import faults as FLT
+
+    def trace(seed):
+        reg = FLT.FaultRegistry([FLT.FaultPlan(
+            "kernel.dispatch", probability=0.5, seed=seed, max_fires=100)])
+        with FLT.scope(reg):
+            return [FLT.check("kernel.dispatch") is not None
+                    for _ in range(32)]
+
+    a, b, c = trace(7), trace(7), trace(8)
+    assert a == b          # same seed -> same firing pattern
+    assert a != c          # different seed -> different pattern
+    assert any(a) and not all(a)
+
+
+def test_check_unarmed_is_inert():
+    from repro.core import faults as FLT
+
+    assert FLT.current() is None
+    assert FLT.check("compile") is None
+    reg = FLT.FaultRegistry([])
+    assert not reg.active
+    with FLT.scope(reg):          # empty registry: scope not armed
+        assert FLT.current() is None
+
+
+def test_parse_spec_and_env(monkeypatch):
+    from repro.core import faults as FLT
+
+    plans = FLT.parse_spec(
+        "shuffle.chunk:mode=raise,nth=3;compile:probability=0.25,seed=9")
+    assert len(plans) == 2
+    assert plans[0].site == "shuffle.chunk" and plans[0].nth == 3
+    assert plans[1].probability == 0.25 and plans[1].seed == 9
+    with pytest.raises(ValueError):
+        FLT.parse_spec("compile:bogus_field=1")
+    monkeypatch.setenv("REPRO_FAULTS", "kernel.dispatch:mode=nan")
+    reg = FLT.from_env()
+    assert reg is not None and reg.active
+    assert reg.plan("kernel.dispatch").effective_mode == "nan"
+    monkeypatch.delenv("REPRO_FAULTS")
+    assert FLT.from_env() is None
+
+
+def test_retry_policy_backoff():
+    from repro.core import faults as FLT
+
+    p = FLT.RetryPolicy(max_attempts=5, base_delay_s=0.1, backoff=2.0,
+                        jitter=0.25, seed=3)
+    d = [p.delay_s(a) for a in range(1, 5)]
+    assert d == [p.delay_s(a) for a in range(1, 5)]  # deterministic
+    # exponential envelope with ±25% jitter
+    for i, (lo_exp) in enumerate(d):
+        base = 0.1 * 2.0 ** i
+        assert 0.75 * base <= d[i] <= 1.25 * base
+    assert FLT.RetryPolicy().delay_s(3) == 0.0  # default: no sleeping
+
+
+def test_rung_classification():
+    from repro.core import faults as FLT
+
+    assert FLT.rung_for(FLT.FaultError("kernel.dispatch")) \
+        == FLT.ORACLE_KERNEL
+    assert FLT.rung_for(FLT.FaultError("shuffle.chunk")) == FLT.MONO_SHUFFLE
+    assert FLT.rung_for(FLT.FaultError("compile")) == "recompile"
+    assert FLT.rung_for(RuntimeError("x")) == "retry"
+
+
+# --------------------------------------------------------------------------
+# PlanFuture failure paths (single device)
+# --------------------------------------------------------------------------
+
+
+def _mini():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.context import DistContext
+    from repro.core.table import Table
+
+    ctx = DistContext()
+    t = Table.from_arrays({
+        "k": jnp.asarray(np.arange(32) % 5, jnp.int32),
+        "v": jnp.asarray((np.arange(32) % 7).astype(np.float32))})
+    return ctx, ctx.scatter(t)
+
+
+def test_failed_future_resolves_exceptionally_once():
+    from repro.core.context import PlanFuture
+
+    boom = ValueError("nope")
+    fut = PlanFuture.failed(boom)
+    assert fut.done and fut.ready()
+    with pytest.raises(ValueError):
+        fut.result()
+    with pytest.raises(ValueError):       # sticky: same error every time
+        fut.result_with_stats()
+
+
+def test_finalize_error_exactly_once_and_pending_cleanup():
+    from repro.core.context import PlanFuture
+
+    calls = []
+
+    def finalize():
+        calls.append(1)
+        raise RuntimeError("finalize blew up")
+
+    fut = PlanFuture(finalize)
+    assert not fut.done
+    with pytest.raises(RuntimeError):
+        fut.result()
+    with pytest.raises(RuntimeError):
+        fut.result()
+    assert calls == [1]                   # the closure ran exactly once
+    assert fut.done
+
+
+def test_dispatch_error_returns_failed_future_and_counts():
+    from repro.core import plan as PL
+
+    ctx, dt = _mini()
+
+    def bad_predicate(cols):
+        raise TypeError("user predicate bug")
+
+    fut = ctx.submit(PL.Select(PL.Scan(0), bad_predicate, key=("bad",)),
+                     [dt])
+    assert fut.done                        # pre-failed, never dispatched
+    with pytest.raises(TypeError):
+        fut.result()
+    assert ctx.cache_stats()["failed_queries"] == 1
+    # the context is not poisoned: a good query still runs
+    out, _ = ctx.groupby(dt, "k", (("v", "sum"),))
+    assert int(out.global_rows()) == 5
+
+
+def test_no_broken_executable_cached():
+    """A trace that dies mid-compile must not leave a cache entry; the
+    next submit of the same plan recompiles cleanly."""
+    from repro.core import plan as PL
+
+    ctx, dt = _mini()
+    state = {"boom": True}
+
+    def flaky(cols):
+        if state["boom"]:
+            raise RuntimeError("trace-time crash")
+        return cols["v"] > 0.0
+
+    plan = PL.Select(PL.Scan(0), flaky, key=("flaky",))
+    entries0 = ctx.cache_stats()["entries"]
+    with pytest.raises(RuntimeError):
+        ctx.submit(plan, [dt]).result()
+    assert ctx.cache_stats()["entries"] == entries0   # nothing admitted
+    state["boom"] = False
+    out = ctx.submit(plan, [dt]).result()
+    assert int(out.global_rows()) > 0
+
+
+def test_drain_collects_errors():
+    from repro.core import plan as PL
+
+    ctx, dt = _mini()
+
+    def bad(cols):
+        raise ValueError("late")
+
+    ctx.submit(PL.Select(PL.Scan(0), bad, key=("late",)), [dt])
+    good = ctx.submit(PL.Project(PL.Scan(0), ("k",)), [dt])
+    # a pre-failed future never enters the pending list, so drain stays
+    # clean; resolving it re-raises for its owner only
+    errs = ctx.drain(raise_errors=False)
+    assert errs == []
+    assert int(good.result().global_rows()) == 32
+
+
+# --------------------------------------------------------------------------
+# validation + quarantine (single device)
+# --------------------------------------------------------------------------
+
+
+def test_validation_flags_nan(monkeypatch):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.context import DistContext
+    from repro.core.table import Table
+
+    ctx = DistContext(validate=True)
+    t = Table.from_arrays({
+        "k": jnp.asarray(np.arange(8) % 2, jnp.int32),
+        "v": jnp.asarray([1.0, np.nan, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+                         jnp.float32)})
+    dt = ctx.scatter(t)
+    problems = ctx._validate_result(dt, [], [dt])
+    assert any("nan" in p.lower() for p in problems)
+
+
+def test_env_spec_arms_context(monkeypatch):
+    from repro.core.context import DistContext
+
+    monkeypatch.setenv("REPRO_FAULTS", "compile:nth=1")
+    ctx = DistContext()
+    assert ctx.faults.active
+    assert ctx.faults.plans[0].site == "compile"
+
+
+# --------------------------------------------------------------------------
+# 8-shard chaos cases (subprocess)
+# --------------------------------------------------------------------------
+
+
+def test_chaos_shuffle_recovery():
+    r = run_case("shuffle_recovery")
+    assert r["all_identical"], r
+    for tag in ("staged", "ring"):
+        assert r[f"{tag}_raise_degraded_shuffle"] >= 1, r
+        assert r[f"{tag}_garble_quarantines"] >= 1, r
+        assert r[f"{tag}_raise_failed"] == 0, r
+        assert r[f"{tag}_garble_failed"] == 0, r
+
+
+def test_chaos_kernel_recovery():
+    r = run_case("kernel_recovery")
+    assert r["raise_identical"] and r["raise_rung"] >= 1, r
+    assert r["nan_identical"] and r["nan_rung"] >= 1, r
+    assert r["persistent_identical"], r
+    assert r["persistent_failed"] == 0, r
+
+
+def test_chaos_stats_overflow_recovery():
+    r = run_case("stats_overflow_recovery")
+    assert r["identical"] and r["identical_second"], r
+    assert r["overflow_retries"] == 1, r
+    assert r["second_submit_retries"] == 0, r      # bad key remembered
+    assert r["failed"] == 0, r
+
+
+def test_chaos_cache_and_compile():
+    r = run_case("cache_and_compile")
+    for mode in ("miss", "evict"):
+        assert r[f"{mode}_identical"], r
+        assert r[f"{mode}_recompiles"] >= 1, r
+        assert r[f"{mode}_failed"] == 0, r
+    assert r["compile_identical"] and r["compile_retries"] >= 1, r
+    assert r["compile_failed"] == 0, r
+
+
+def test_chaos_serving_survival():
+    r = run_case("serving_survival")
+    assert r["fault_all_succeeded"], r
+    assert r["fault_failed"] == 0 and r["fault_degraded"] >= 1, r
+    assert r["fault_retries_bounded"], r
+    assert r["boom_failed"] == 1, r       # the boom shape ran exactly once
+    assert r["boom_failed_labels"] == ["boom"], r
+    assert r["boom_succeeded"] == r["boom_queries"] - 1, r
+    assert r["ref_failed"] == 0, r
+
+
+def test_explain_recovery_annotations():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import plan as PL
+
+    # plan-layer explain at p=8 (nothing executes), so the shuffle is
+    # live and every rung shows
+    plan = PL.GroupBy(PL.Scan(0), ("k",), (("v", "sum"),),
+                      strategy="shuffle", bucket_capacity=64)
+    schemas = [{"k": jax.ShapeDtypeStruct((64,), jnp.int32),
+                "v": jax.ShapeDtypeStruct((64,), jnp.float32)}]
+    physical = PL.apply_cost_model(plan, schemas, 8, None)
+    plain = PL.explain(physical)
+    annotated = PL.explain(physical, recovery=True)
+    assert "recovery=" not in plain          # opt-in only: goldens stable
+    assert "oracle-kernel" in annotated      # GroupBy has a kernel rung
+    assert "mono-alltoall" in annotated      # live shuffle has a mono rung
+
+    # a single-device session elides the shuffle: only the kernel rung
+    ctx, dt = _mini()
+    fr = ctx.frame(dt).groupby("k", (("v", "sum"),))
+    assert "recovery=oracle-kernel" in fr.explain(recovery=True)
+    assert "recovery=" not in fr.explain()

@@ -79,3 +79,60 @@ def test_resume_empty_dir(tmp):
     mgr = ckpt.CheckpointManager(tmp)
     restored, step = mgr.resume({"x": jnp.zeros(())})
     assert restored is None and step == 0
+
+
+def _corrupt_leaf(tmp, step, idx=-1, *, truncate=None, flip=False):
+    d = os.path.join(tmp, f"step_{step:08d}")
+    leaf = sorted(f for f in os.listdir(d) if f.endswith(".npy"))[idx]
+    path = os.path.join(d, leaf)
+    with open(path, "r+b") as f:
+        if truncate is not None:
+            f.truncate(truncate)
+        if flip:
+            f.seek(-1, 2)
+            b = f.read(1)
+            f.seek(-1, 2)
+            f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_restore_detects_truncation(tmp):
+    s = _state()
+    ckpt.save(tmp, 5, s)
+    _corrupt_leaf(tmp, 5, truncate=40)
+    like = jax.eval_shape(lambda: s)
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(tmp, 5, like)
+
+
+def test_restore_detects_bitflip(tmp):
+    s = _state()
+    ckpt.save(tmp, 5, s)
+    _corrupt_leaf(tmp, 5, flip=True)
+    like = jax.eval_shape(lambda: s)
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(tmp, 5, like)
+
+
+def test_resume_falls_back_past_corrupt_newest(tmp):
+    s = _state()
+    ckpt.save(tmp, 10, s)
+    ckpt.save(tmp, 20, s)
+    _corrupt_leaf(tmp, 20, truncate=10)
+    like = jax.eval_shape(lambda: s)
+    mgr = ckpt.CheckpointManager(tmp)
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        restored, step = mgr.resume(like)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(s["a"]))
+
+
+def test_list_steps_skips_unreadable_manifest(tmp):
+    s = _state()
+    ckpt.save(tmp, 1, s)
+    ckpt.save(tmp, 2, s)
+    with open(os.path.join(tmp, "step_00000002", "manifest.json"),
+              "w") as f:
+        f.write("{half-written")
+    assert ckpt.list_steps(tmp) == [1]
+    assert ckpt.latest_step(tmp) == 1

@@ -108,3 +108,30 @@ def test_zipf_skew():
     # heavy head: the most common key appears far above uniform expectation
     _, counts = np.unique(k, return_counts=True)
     assert counts.max() > 20 * (5000 / 1000)
+
+
+def test_prefetcher_propagates_worker_error():
+    """A crash in the source iterator must re-raise in the CONSUMER —
+    not vanish in the worker thread as a silent early end-of-data."""
+    def flaky():
+        yield {"tokens": np.zeros((2, 4), np.int32)}
+        yield {"tokens": np.ones((2, 4), np.int32)}
+        raise RuntimeError("source blew up")
+
+    pf = Prefetcher(flaky(), depth=2)
+    got = [next(pf), next(pf)]
+    assert len(got) == 2
+    try:
+        next(pf)
+    except RuntimeError as e:
+        assert "source blew up" in str(e)
+    else:
+        raise AssertionError("worker error was swallowed")
+
+
+def test_prefetcher_clean_stop_unaffected():
+    def fine():
+        for i in range(3):
+            yield i
+
+    assert list(Prefetcher(fine(), depth=2)) == [0, 1, 2]
